@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_worker(spec: dict, timeout: int = 3600) -> list[dict]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src") + ":" + _REPO
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks._worker", json.dumps(spec)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        cwd=_REPO,
+        env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT_JSON:")]
+    return json.loads(line[-1][len("RESULT_JSON:") :])
+
+
+def save_results(name: str, records) -> str:
+    out_dir = os.path.join(_REPO, "results", "benchmarks")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    return path

@@ -1,0 +1,68 @@
+"""Subprocess worker for multi-device quadrature benchmarks.
+
+Usage: python -m benchmarks._worker '<json spec>'
+spec = {"n_devices": int, "cases": [{integrand, d, rel_tol, capacity,
+        classifier, redistribution, max_iters, use_kernel}]}
+Prints one line: RESULT_JSON:[...per-case records...]
+"""
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    spec = json.loads(sys.argv[1])
+    n_dev = int(spec.get("n_devices", 1))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={max(n_dev, 1)} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core import integrands
+    from repro.core.adaptive import integrate
+    from repro.core.config import QuadratureConfig
+    from repro.core.distributed import integrate_distributed
+
+    out = []
+    for case in spec["cases"]:
+        case = dict(case)
+        distributed = case.pop("distributed", n_dev > 1)
+        cfg = QuadratureConfig(**case)
+        t0 = time.time()
+        if distributed:
+            res = integrate_distributed(cfg)
+            extra = {
+                "mean_imbalance": res.mean_imbalance(),
+                "evals_per_device": res.evals_per_device.tolist(),
+                "history_tail": res.history[-3:],
+            }
+        else:
+            res = integrate(cfg)
+            extra = {}
+        wall = time.time() - t0
+        exact = integrands.get(cfg.integrand).exact(cfg.d)
+        out.append(
+            {
+                **case,
+                "n_devices": n_dev if distributed else 1,
+                "integral": res.integral,
+                "eps": res.error,
+                "status": res.status,
+                "iterations": res.iterations,
+                "n_evals": res.n_evals,
+                "wall_s": wall,
+                "exact": exact,
+                "rel_err": abs(res.integral - exact) / max(abs(exact), 1e-300),
+                **extra,
+            }
+        )
+    print("RESULT_JSON:" + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fig. 2a analogue: runtime/evaluations vs tolerance, GM (robust) vs the
+PAGANI-style aggressive-pruning baseline, single device.
+
+Paper claims reproduced: the robust GM solver converges on oscillatory f1 at
+every tolerance while the aggressive baseline stalls/fails at tight
+tolerances; the baseline is competitive on peaked integrands (f2)."""
+
+from benchmarks._common import run_worker, save_results
+
+FAST_GRID = dict(ds={"f1": 3, "f4": 3, "f6": 3}, tols=(1e-4, 1e-6, 1e-8))
+FULL_GRID = dict(
+    ds={"f1": 5, "f2": 5, "f4": 5, "f6": 4},
+    tols=(1e-3, 1e-4, 1e-5, 1e-6, 1e-7, 1e-8, 1e-9, 1e-10),
+)
+
+
+def run(fast: bool = True):
+    grid = FAST_GRID if fast else FULL_GRID
+    cases = []
+    for name, d in grid["ds"].items():
+        for tol in grid["tols"]:
+            for classifier in ("robust", "aggressive"):
+                cases.append(
+                    dict(
+                        integrand=name,
+                        d=d,
+                        rel_tol=tol,
+                        capacity=1 << 15,
+                        classifier=classifier,
+                        max_iters=200,
+                        distributed=False,
+                    )
+                )
+    recs = run_worker({"n_devices": 1, "cases": cases})
+    save_results("fig2a_runtime", recs)
+    return recs
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"fig2a/{r['integrand']}_d{r['d']}_{r['classifier']}_tol{r['rel_tol']:.0e}",
+            r["wall_s"] * 1e6,
+            f"evals={r['n_evals']:.3g};status={r['status']}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,45 @@
+"""Fig. 2b analogue: achieved relative error vs requested tolerance for the
+whole f1..f7 suite.  Claim: the robust solver meets every requested
+tolerance; the aggressive baseline can overshoot on the Gaussian (f4) at
+intermediate tolerances (over-optimistic pruning in the tails)."""
+
+from benchmarks._common import run_worker, save_results
+
+SUITE = {"f1": 3, "f2": 3, "f3": 4, "f4": 3, "f5": 3, "f6": 3, "f7": 4}
+
+
+def run(fast: bool = True):
+    tols = (1e-5, 1e-7) if fast else (1e-4, 1e-5, 1e-6, 1e-7, 1e-8, 1e-9)
+    cases = []
+    for name, d in SUITE.items():
+        for tol in tols:
+            for classifier in ("robust", "aggressive"):
+                cases.append(
+                    dict(
+                        integrand=name,
+                        d=d,
+                        rel_tol=tol,
+                        capacity=1 << 15,
+                        classifier=classifier,
+                        max_iters=300,
+                        distributed=False,
+                    )
+                )
+    recs = run_worker({"n_devices": 1, "cases": cases})
+    save_results("fig2b_accuracy", recs)
+    return recs
+
+
+def rows(recs):
+    for r in recs:
+        met = r["rel_err"] <= 10 * r["rel_tol"] or r["status"] != "converged"
+        yield (
+            f"fig2b/{r['integrand']}_d{r['d']}_{r['classifier']}_tol{r['rel_tol']:.0e}",
+            r["wall_s"] * 1e6,
+            f"rel_err={r['rel_err']:.2e};met={met}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,63 @@
+"""Fig. 3a analogue: strictest achievable tolerance vs dimension, 1 vs 2
+devices.  The region store is the memory proxy (fixed per-device capacity):
+multi-device execution extends feasibility because capacity scales with
+device count — the paper's central multi-GPU claim."""
+
+from benchmarks._common import run_worker, save_results
+
+TOL_LADDER = (1e-3, 1e-5, 1e-7, 1e-9, 1e-11)
+
+
+def _strictest(n_dev, name, d, capacity, fast):
+    ladder = TOL_LADDER[: 3 if fast else len(TOL_LADDER)]
+    cases = [
+        dict(
+            integrand=name,
+            d=d,
+            rel_tol=tol,
+            capacity=capacity,
+            max_iters=60 if fast else 150,
+            distributed=n_dev > 1,
+        )
+        for tol in ladder
+    ]
+    recs = run_worker({"n_devices": n_dev, "cases": cases})
+    best = None
+    for r in recs:
+        if r["status"] == "converged" and r["rel_err"] <= 10 * r["rel_tol"]:
+            best = r["rel_tol"]
+    return best, recs
+
+
+def run(fast: bool = True):
+    out = []
+    dims = (3, 4) if fast else (3, 4, 5, 6, 7)
+    for name in ("f1", "f5"):
+        for d in dims:
+            for n_dev in (1, 2):
+                best, recs = _strictest(n_dev, name, d, 1 << 12, fast)
+                out.append(
+                    {
+                        "integrand": name,
+                        "d": d,
+                        "n_devices": n_dev,
+                        "strictest_tol": best,
+                        "runs": recs,
+                    }
+                )
+    save_results("fig3a_feasibility", out)
+    return out
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"fig3a/{r['integrand']}_d{r['d']}_dev{r['n_devices']}",
+            0.0,
+            f"strictest_tol={r['strictest_tol']}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,64 @@
+"""Fig. 3b analogue: speedup of distributed GM (2 devices) over the
+single-device PAGANI-style aggressive baseline at matched (tolerance, d)."""
+
+from benchmarks._common import run_worker, save_results
+
+
+def run(fast: bool = True):
+    grid = [("f1", 3, 1e-6), ("f4", 3, 1e-6)] if fast else [
+        ("f1", 4, 1e-7),
+        ("f2", 4, 1e-6),
+        ("f4", 4, 1e-7),
+        ("f6", 3, 1e-6),
+    ]
+    out = []
+    for name, d, tol in grid:
+        base = run_worker(
+            {
+                "n_devices": 1,
+                "cases": [
+                    dict(
+                        integrand=name, d=d, rel_tol=tol, capacity=1 << 15,
+                        classifier="aggressive", max_iters=300, distributed=False,
+                    )
+                ],
+            }
+        )[0]
+        dist = run_worker(
+            {
+                "n_devices": 2,
+                "cases": [
+                    dict(
+                        integrand=name, d=d, rel_tol=tol, capacity=1 << 14,
+                        max_iters=300, distributed=True,
+                    )
+                ],
+            }
+        )[0]
+        out.append(
+            {
+                "integrand": name,
+                "d": d,
+                "rel_tol": tol,
+                "baseline": base,
+                "distributed": dist,
+                "speedup_evals": base["n_evals"] / max(dist["n_evals"], 1),
+                "speedup_wall": base["wall_s"] / max(dist["wall_s"], 1e-9),
+            }
+        )
+    save_results("fig3b_speedup", out)
+    return out
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"fig3b/{r['integrand']}_d{r['d']}",
+            r["distributed"]["wall_s"] * 1e6,
+            f"speedup_evals={r['speedup_evals']:.2f};speedup_wall={r['speedup_wall']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

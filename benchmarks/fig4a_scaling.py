@@ -1,0 +1,49 @@
+"""Fig. 4a analogue: strong scaling of the round-robin policy (1,2,4,8
+ranks).  The paper observes improvement to ~4 devices then flattening —
+driven by synchronisation overhead and capped redistribution."""
+
+from benchmarks._common import run_worker, save_results
+
+
+def run(fast: bool = True):
+    devs = (1, 2, 4) if fast else (1, 2, 4, 8, 12)
+    grid = [("f2", 4, 1e-6)] if fast else [("f2", 6, 1e-7), ("f6", 6, 1e-7)]
+    out = []
+    for name, d, tol in grid:
+        for n in devs:
+            rec = run_worker(
+                {
+                    "n_devices": n,
+                    "cases": [
+                        dict(
+                            integrand=name, d=d, rel_tol=tol,
+                            capacity=1 << 14, max_iters=200,
+                            distributed=n > 1,
+                        )
+                    ],
+                },
+            )[0]
+            out.append({"integrand": name, "d": d, "n_devices": n, **rec})
+    save_results("fig4a_scaling", out)
+    return out
+
+
+def rows(recs):
+    base = {}
+    for r in recs:
+        key = (r["integrand"], r["d"])
+        if r["n_devices"] == 1:
+            base[key] = r["wall_s"]
+    for r in recs:
+        key = (r["integrand"], r["d"])
+        speedup = base.get(key, r["wall_s"]) / max(r["wall_s"], 1e-9)
+        yield (
+            f"fig4a/{r['integrand']}_d{r['d']}_dev{r['n_devices']}",
+            r["wall_s"] * 1e6,
+            f"speedup={speedup:.2f};evals={r['n_evals']:.3g}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,53 @@
+"""Fig. 4b analogue: per-iteration work imbalance (idle-time proxy) with the
+redistribution policy ON vs OFF, by device count.  idle ~ 1 - mean/max of
+per-device work per iteration."""
+
+from benchmarks._common import run_worker, save_results
+
+
+def run(fast: bool = True):
+    devs = (2, 4) if fast else (2, 4, 8)
+    grid = [("f6", 3, 1e-5)] if fast else [("f3", 6, 1e-8), ("f6", 6, 1e-8)]
+    out = []
+    for name, d, tol in grid:
+        for n in devs:
+            for redis in ("xor", "off"):
+                rec = run_worker(
+                    {
+                        "n_devices": n,
+                        "cases": [
+                            dict(
+                                integrand=name, d=d, rel_tol=tol,
+                                capacity=1 << 13, max_iters=200,
+                                redistribution=redis, distributed=True,
+                            )
+                        ],
+                    },
+                )[0]
+                out.append(
+                    {
+                        "integrand": name,
+                        "d": d,
+                        "n_devices": n,
+                        "redistribution": redis,
+                        "mean_imbalance": rec["mean_imbalance"],
+                        "status": rec["status"],
+                        "wall_s": rec["wall_s"],
+                    }
+                )
+    save_results("fig4b_idle", out)
+    return out
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"fig4b/{r['integrand']}_d{r['d']}_dev{r['n_devices']}_{r['redistribution']}",
+            r["wall_s"] * 1e6,
+            f"imbalance={r['mean_imbalance']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,101 @@
+"""Hillclimbing driver: sweep config variants for one (arch x shape) cell.
+
+Per variant: full-module compile (memory + collectives) and, when requested,
+the marginal-period roofline terms.  Results append to
+results/hillclimb/<arch>__<shape>.json so iterations accumulate into the
+§Perf log.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.hillclimb --arch X --shape Y \
+      --variant '{"name": "...", "microbatches": 8, "rules": {...}, "cfg": {...}}'
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+
+def measure_variant(arch, shape_name, variant, *, roofline=True):
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import build_cell, collective_bytes
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if variant.get("cfg"):
+        cfg = dataclasses.replace(cfg, **variant["cfg"])
+    mesh = make_production_mesh()
+    kw = dict(
+        microbatches=variant.get("microbatches", 8),
+        remat=variant.get("remat", "full"),
+        zero1=variant.get("zero1", False),
+        rules=variant.get("rules"),
+    )
+    fn, args, sh, dn = build_cell(cfg, shape_name, mesh, **kw)
+    compiled = jax.jit(fn, in_shardings=sh, donate_argnums=dn).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "variant": variant.get("name", "unnamed"),
+        "spec": {k: v for k, v in variant.items() if k != "name"},
+        "temp_gib": mem.temp_size_in_bytes / 2**30 if mem else None,
+        "arg_gib": mem.argument_size_in_bytes / 2**30 if mem else None,
+        "coll_gib": sum(v for k, v in coll.items() if k != "count") / 2**30,
+        "coll_by_kind": coll,
+    }
+    if roofline:
+        from benchmarks.roofline import analyse_cell
+
+        rl = analyse_cell(
+            arch,
+            shape_name,
+            microbatches=kw["microbatches"],
+            remat=kw["remat"],
+            rules=kw["rules"],
+        )
+        for key in (
+            "compute_s",
+            "memory_s",
+            "collective_s",
+            "dominant",
+            "roofline_frac",
+            "useful_ratio",
+        ):
+            rec[key] = rl.get(key)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, help="JSON variant spec")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+
+    variant = json.loads(args.variant)
+    rec = measure_variant(
+        args.arch, args.shape, variant, roofline=not args.no_roofline
+    )
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}.json")
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append(rec)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

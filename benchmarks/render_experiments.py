@@ -1,0 +1,126 @@
+"""Assemble EXPERIMENTS.md tables from results/ JSON artifacts.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.render_experiments
+Writes markdown fragments to results/fragments/*.md which EXPERIMENTS.md
+references (and inlines at final render).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(pattern):
+    out = []
+    for path in sorted(glob.glob(os.path.join(_REPO, pattern))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def dryrun_table(dirname="results/dryrun") -> str:
+    recs = _load(f"{dirname}/*.json")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    rows = [
+        "| arch | shape | mesh | status | compile (s) | HLO GFLOP/chip | "
+        "temp GiB/chip | collectives MiB/chip | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skip":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | — | — | — | — "
+                f"| {r['reason']} |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | — | — | — | — "
+                f"| {r.get('error','')[:80]} |"
+            )
+            continue
+        coll = sum(v for k, v in r.get("collectives", {}).items() if k != "count")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('compile_s', 0):.0f} "
+            f"| {r.get('flops', 0)/1e9:.1f} "
+            f"| {r.get('temp_size_in_bytes', 0)/2**30:.2f} "
+            f"| {coll/2**20:.0f} | |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(dirname="results/roofline") -> str:
+    recs = _load(f"{dirname}/*.json")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    rows = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+        "MODEL/HLO FLOPs | compute frac of bound | what would move the bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        "compute": "more chips or lower-precision matmuls",
+        "memory": "shrink the working set (cache dtype/sharding, fusion)",
+        "collective": "reshard to cut gather volume / overlap with compute",
+    }
+    for r in recs:
+        if r["status"] == "skip":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | {r['reason']} |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — "
+                f"| {r.get('error','')[:60]} |"
+            )
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} | "
+            f"{hints[r['dominant']]} |"
+        )
+    return "\n".join(rows)
+
+
+def bench_tables() -> str:
+    chunks = []
+    for name in (
+        "fig2a_runtime",
+        "fig2b_accuracy",
+        "fig3a_feasibility",
+        "fig3b_speedup",
+        "fig4a_scaling",
+        "fig4b_idle",
+        "kernel_bench",
+    ):
+        path = os.path.join(_REPO, "results", "benchmarks", f"{name}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            recs = json.load(f)
+        chunks.append(f"### {name}\n```json\n{json.dumps(recs, indent=1)[:6000]}\n```")
+    return "\n\n".join(chunks)
+
+
+def main() -> None:
+    frag_dir = os.path.join(_REPO, "results", "fragments")
+    os.makedirs(frag_dir, exist_ok=True)
+    with open(os.path.join(frag_dir, "dryrun_table.md"), "w") as f:
+        f.write(dryrun_table())
+    with open(os.path.join(frag_dir, "dryrun_iter0_table.md"), "w") as f:
+        f.write(dryrun_table("results/dryrun_iter0_baseline"))
+    with open(os.path.join(frag_dir, "roofline_table.md"), "w") as f:
+        f.write(roofline_table())
+    print("fragments written to", frag_dir)
+
+
+if __name__ == "__main__":
+    main()

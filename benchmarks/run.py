@@ -1,0 +1,60 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default mode runs reduced
+grids sized for this CPU container; pass ``--full`` for the figure-scale
+grids and ``--roofline`` to include the (slow) LM roofline sweep.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated module names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig2a_runtime,
+        fig2b_accuracy,
+        fig3a_feasibility,
+        fig3b_speedup,
+        fig4a_scaling,
+        fig4b_idle,
+        kernel_bench,
+    )
+
+    modules = {
+        "fig2a": fig2a_runtime,
+        "fig2b": fig2b_accuracy,
+        "fig3a": fig3a_feasibility,
+        "fig3b": fig3b_speedup,
+        "fig4a": fig4a_scaling,
+        "fig4b": fig4b_idle,
+        "kernel": kernel_bench,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        try:
+            recs = mod.run(fast=not args.full)
+            for row in mod.rows(recs):
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: adaptive multidimensional quadrature + multi-pod LM substrate."""
+__version__ = "0.1.0"

@@ -1,0 +1,23 @@
+"""Core library: the paper's adaptive multidimensional quadrature."""
+
+from repro.core.adaptive import (
+    AdaptiveResult,
+    integrate,
+    integrate_device,
+    integrate_exact_check,
+)
+from repro.core.config import QuadratureConfig
+from repro.core.integrands import REGISTRY as INTEGRANDS
+from repro.core.rules import GaussKronrodRule, GenzMalikRule, make_rule
+
+__all__ = [
+    "AdaptiveResult",
+    "GaussKronrodRule",
+    "GenzMalikRule",
+    "INTEGRANDS",
+    "QuadratureConfig",
+    "integrate",
+    "integrate_device",
+    "integrate_exact_check",
+    "make_rule",
+]

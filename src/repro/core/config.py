@@ -1,0 +1,81 @@
+"""Configuration for the adaptive quadrature engine (single- and multi-device)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadratureConfig:
+    """Static configuration of one integration problem.
+
+    Everything here is compile-time static; the dynamic problem state lives in
+    :class:`repro.core.region_store.RegionState`.
+    """
+
+    d: int
+    integrand: str = "f4"
+    rel_tol: float = 1e-8
+    abs_tol: float = 1e-16  # the paper's floor: eps <= max(1e-16, |I| tau_rel)
+    capacity: int = 1 << 14  # fixed SoA region-store capacity per device
+    # Initial uniform partition size (power of two).  0 = auto: 2^d clipped to
+    # capacity/4 — splitting EVERY axis at least once is required so that a
+    # sharp feature at the domain centre (e.g. f4's Gaussian, which sits on
+    # the corner of every octant) is bracketed by rule nodes; with fewer
+    # boxes the fully-symmetric rule can be structurally blind to it and
+    # converge to a wrong answer (regression-tested).
+    n_init: int = 0
+    max_iters: int = 600
+    classifier: str = "robust"  # "robust" (ours) | "aggressive" (PAGANI-like)
+    rule: str = "genz_malik"  # "genz_malik" | "gauss_kronrod"
+    use_kernel: bool = False  # Pallas GM kernel (interpret on CPU) vs pure jnp
+    dtype: str = "float64"
+    # --- distributed ---------------------------------------------------------
+    message_cap: int = 512  # max regions per transfer (paper default)
+    init_regions_per_device: int = 8  # paper: 8 subdomains per rank at startup
+    redistribution: str = "ring"  # any value != "off" enables the static
+    #   ring-schedule round-robin policy ("xor" accepted as a legacy alias)
+    # --- numerical guards (Gander-Gautschi style) -----------------------------
+    min_width_frac: float = 1e-10  # halfwidth floor relative to domain width
+    noise_mult: float = 50.0  # round-off noise floor multiplier
+    # A region may not be FINALISED before it has been bisected this many
+    # times per axis (on average, by volume): pre-asymptotic rule estimates
+    # on smooth peaked integrands (f3) can coincidentally agree while all
+    # biased the same way, so the summed claimed error understates the true
+    # error ~10x at loose tolerances; two confirmed halvings per axis puts
+    # the embedded differences in the asymptotic regime first.  Convergence
+    # itself needs no finalisation, so cheap problems are unaffected.
+    min_depth_per_axis: int = 2
+    # --- domain (defaults to the unit cube) -----------------------------------
+    domain_lo: tuple = ()
+    domain_hi: tuple = ()
+
+    def lo(self) -> tuple:
+        return self.domain_lo if self.domain_lo else (0.0,) * self.d
+
+    def hi(self) -> tuple:
+        return self.domain_hi if self.domain_hi else (1.0,) * self.d
+
+    def resolved_n_init(self) -> int:
+        if self.n_init:
+            return self.n_init
+        return max(8, min(2**self.d, self.capacity // 4, 1 << 12))
+
+    def validate(self) -> "QuadratureConfig":
+        if self.d < 1:
+            raise ValueError("d must be >= 1")
+        if self.capacity & (self.capacity - 1):
+            raise ValueError("capacity must be a power of two")
+        if self.n_init & (self.n_init - 1):
+            raise ValueError("n_init must be a power of two (or 0 = auto)")
+        if self.resolved_n_init() > self.capacity // 2:
+            raise ValueError("n_init must leave room to split (<= capacity/2)")
+        if self.classifier not in ("robust", "aggressive"):
+            raise ValueError(f"unknown classifier {self.classifier!r}")
+        if self.rule not in ("genz_malik", "gauss_kronrod"):
+            raise ValueError(f"unknown rule {self.rule!r}")
+        if len(self.domain_lo) not in (0, self.d):
+            raise ValueError("domain_lo must be empty or length d")
+        if len(self.domain_hi) not in (0, self.d):
+            raise ValueError("domain_hi must be empty or length d")
+        return self

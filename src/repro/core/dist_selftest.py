@@ -1,0 +1,76 @@
+"""Self-contained multi-device self-test, run in a subprocess by the tests.
+
+Must be launched as ``python -m repro.core.dist_selftest [n_devices]`` —
+sets XLA_FLAGS before importing jax, runs distributed-vs-single checks, and
+prints one JSON blob on the last line.
+"""
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import integrands
+    from repro.core.adaptive import integrate
+    from repro.core.config import QuadratureConfig
+    from repro.core.distributed import integrate_distributed
+
+    assert len(jax.devices()) == n_dev, jax.devices()
+
+    out = {"n_devices": n_dev, "cases": []}
+    cases = [
+        ("f4", 4, 1e-6),
+        ("f2", 3, 1e-6),
+        ("f6", 3, 1e-5),
+        ("f1", 4, 1e-6),
+    ]
+    for name, d, tol in cases:
+        cfg = QuadratureConfig(
+            d=d, integrand=name, rel_tol=tol, capacity=1 << 13, max_iters=200
+        )
+        single = integrate(cfg)
+        dist = integrate_distributed(cfg)
+        off = integrate_distributed(
+            QuadratureConfig(**{**cfg.__dict__, "redistribution": "off"})
+        )
+        exact = integrands.get(name).exact(d)
+        out["cases"].append(
+            {
+                "integrand": name,
+                "d": d,
+                "rel_tol": tol,
+                "exact": exact,
+                "single": {"I": single.integral, "status": single.status},
+                "dist": {
+                    "I": dist.integral,
+                    "eps": dist.error,
+                    "status": dist.status,
+                    "iters": dist.iterations,
+                    "n_evals": dist.n_evals,
+                    "mean_imbalance": dist.mean_imbalance(),
+                    "evals_per_device": dist.evals_per_device.tolist(),
+                },
+                "dist_noredist": {
+                    "I": off.integral,
+                    "status": off.status,
+                    "mean_imbalance": off.mean_imbalance(),
+                },
+            }
+        )
+
+    print("RESULT_JSON:" + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

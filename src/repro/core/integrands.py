@@ -1,0 +1,220 @@
+"""Benchmark integrands from the paper (Section 4) + exact reference values.
+
+All integrands use the SoA convention of the framework: ``f(x)`` receives
+coordinates of shape ``(d, N)`` and returns values of shape ``(N,)``.  This
+matches the paper's Structure-of-Arrays layout and the TPU lane layout used
+by the Pallas kernel (regions on the 128-wide lane axis).
+
+Exact values are analytic (separable products, the Genz corner-peak
+inclusion-exclusion formula, and a multinomial DP for f7) over [0, 1]^d.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Integrand:
+    name: str
+    fn: Callable[[jnp.ndarray], jnp.ndarray]  # (d, N) -> (N,)
+    exact: Callable[[int], float]  # exact integral over [0,1]^d
+    description: str = ""
+    smooth: bool = True
+
+
+def _axis_coeff(d: int, dtype, start: int = 1) -> jnp.ndarray:
+    return jnp.arange(start, start + d, dtype=dtype)[:, None]
+
+
+# --- f1: oscillatory ---------------------------------------------------------
+
+
+def f1(x: jnp.ndarray) -> jnp.ndarray:
+    d = x.shape[0]
+    i = _axis_coeff(d, x.dtype)
+    return jnp.cos(jnp.sum(i * x, axis=0))
+
+
+def f1_exact(d: int) -> float:
+    # cos(sum i x_i) = Re prod_k exp(i k x_k); each 1-D factor integrates to
+    # (exp(i k) - 1) / (i k).
+    p = complex(1.0, 0.0)
+    for k in range(1, d + 1):
+        p *= (np.exp(1j * k) - 1.0) / (1j * k)
+    return float(p.real)
+
+
+# --- f2: product peak --------------------------------------------------------
+
+_F2_B2 = 50.0**-2
+
+
+def f2(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.prod(1.0 / (_F2_B2 + (x - 0.5) ** 2), axis=0)
+
+
+def f2_exact(d: int) -> float:
+    b = 0.02
+    one_dim = (2.0 / b) * math.atan(0.5 / b)
+    return float(one_dim**d)
+
+
+# --- f3: corner peak ---------------------------------------------------------
+
+
+def f3(x: jnp.ndarray) -> jnp.ndarray:
+    d = x.shape[0]
+    i = _axis_coeff(d, x.dtype)
+    return (1.0 + jnp.sum(i * x, axis=0)) ** (-(d + 1.0))
+
+
+def f3_exact(d: int) -> float:
+    # Inclusion-exclusion (Genz): 1/(d! prod c_i) sum_{v in {0,1}^d}
+    #   (-1)^|v| / (1 + c . v),   c_i = i.
+    c = list(range(1, d + 1))
+    total = 0.0
+    for mask in range(2**d):
+        s = 1.0
+        bits = 0
+        for i in range(d):
+            if (mask >> i) & 1:
+                s += c[i]
+                bits += 1
+        total += (-1.0) ** bits / s
+    return float(total / (math.factorial(d) * math.prod(c)))
+
+
+# --- f4: Gaussian ------------------------------------------------------------
+
+
+def f4(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.exp(-(25.0**2) * jnp.sum((x - 0.5) ** 2, axis=0))
+
+
+def f4_exact(d: int) -> float:
+    one_dim = math.sqrt(math.pi) / 25.0 * math.erf(12.5)
+    return float(one_dim**d)
+
+
+# --- f5: C0 (kink) -----------------------------------------------------------
+
+
+def f5(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.exp(-10.0 * jnp.sum(jnp.abs(x - 0.5), axis=0))
+
+
+def f5_exact(d: int) -> float:
+    one_dim = 0.2 * (1.0 - math.exp(-5.0))
+    return float(one_dim**d)
+
+
+# --- f6: discontinuous -------------------------------------------------------
+
+
+def f6(x: jnp.ndarray) -> jnp.ndarray:
+    d = x.shape[0]
+    i = _axis_coeff(d, x.dtype)  # 1-based axis index
+    cut = (3.0 + i) / 10.0
+    inside = jnp.all(x <= cut, axis=0)
+    val = jnp.exp(jnp.sum((i + 4.0) * x, axis=0))
+    return jnp.where(inside, val, 0.0)
+
+
+def f6_exact(d: int) -> float:
+    p = 1.0
+    for i in range(1, d + 1):
+        c = i + 4.0
+        u = min(1.0, (3.0 + i) / 10.0)
+        p *= (math.exp(c * u) - 1.0) / c
+    return float(p)
+
+
+# --- f7: polynomial ridge ----------------------------------------------------
+
+_F7_POW = 11
+
+
+def f7(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x * x, axis=0) ** _F7_POW
+
+
+@lru_cache(maxsize=None)
+def _f7_dp(j: int, p: int) -> float:
+    # F(j, p) = sum_{|k| = p over j dims} p!/prod(k!) prod E[x^{2 k_i}],
+    # with E[x^{2k}] = 1/(2k+1) on [0,1].
+    if j == 0:
+        return 1.0 if p == 0 else 0.0
+    total = 0.0
+    for k in range(p + 1):
+        total += math.comb(p, k) * (1.0 / (2 * k + 1)) * _f7_dp(j - 1, p - k)
+    return total
+
+
+def f7_exact(d: int) -> float:
+    return float(_f7_dp(d, _F7_POW))
+
+
+# --- auxiliary integrands for property tests & demos ------------------------
+
+
+def make_monomial(powers: tuple[int, ...]) -> Integrand:
+    """prod x_i^{p_i} with exact integral prod 1/(p_i + 1) over [0,1]^d."""
+    p = np.asarray(powers, dtype=np.float64)
+
+    def fn(x):
+        return jnp.prod(x ** jnp.asarray(p, dtype=x.dtype)[:, None], axis=0)
+
+    exact = float(np.prod(1.0 / (p + 1.0)))
+    return Integrand(
+        name=f"monomial{powers}", fn=fn, exact=lambda d: exact, smooth=True
+    )
+
+
+def make_genz_gaussian(a: np.ndarray, u: np.ndarray) -> Integrand:
+    """Generic Genz Gaussian exp(-sum a_i^2 (x_i - u_i)^2) with exact value."""
+    a = np.asarray(a, np.float64)
+    u = np.asarray(u, np.float64)
+
+    def fn(x):
+        aa = jnp.asarray(a, x.dtype)[:, None]
+        uu = jnp.asarray(u, x.dtype)[:, None]
+        return jnp.exp(-jnp.sum((aa * (x - uu)) ** 2, axis=0))
+
+    def exact(d: int) -> float:
+        p = 1.0
+        for ai, ui in zip(a[:d], u[:d]):
+            p *= (
+                math.sqrt(math.pi)
+                / (2.0 * ai)
+                * (math.erf(ai * (1.0 - ui)) + math.erf(ai * ui))
+            )
+        return p
+
+    return Integrand(name="genz_gaussian", fn=fn, exact=exact)
+
+
+REGISTRY: dict[str, Integrand] = {
+    "f1": Integrand("f1", f1, f1_exact, "oscillatory cos(sum i x_i)"),
+    "f2": Integrand("f2", f2, f2_exact, "product peak at x=1/2"),
+    "f3": Integrand("f3", f3, f3_exact, "corner peak"),
+    "f4": Integrand("f4", f4, f4_exact, "sharp isotropic Gaussian"),
+    "f5": Integrand("f5", f5, f5_exact, "C0 kink at x=1/2", smooth=False),
+    "f6": Integrand("f6", f6, f6_exact, "discontinuous exponential", smooth=False),
+    "f7": Integrand("f7", f7, f7_exact, "(sum x^2)^11 polynomial ridge"),
+}
+
+
+def get(name: str) -> Integrand:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown integrand {name!r}; known: {sorted(REGISTRY)}"
+        ) from None

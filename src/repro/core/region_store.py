@@ -1,0 +1,161 @@
+"""Fixed-capacity Structure-of-Arrays region store.
+
+XLA requires static shapes, so the dynamic region list of CPU adaptive codes
+becomes a fixed-capacity SoA store plus an ``active`` mask — the same design
+PAGANI uses on GPU (the paper keeps "all subregion data resident on the
+device" in SoA layout; here the arrays additionally live in a jit-compiled
+program so the whole iteration is one XLA module).
+
+Slot discipline maintained by ``repro.core.split.classify_split_compact``:
+active regions are compacted to the front and sorted by descending error
+estimate; finalised regions are folded into scalar accumulators and their
+slots freed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "centers",
+        "halfw",
+        "est",
+        "err",
+        "axis",
+        "active",
+        "fresh",
+        "fin_integral",
+        "fin_error",
+        "n_evals",
+        "it",
+        "overflowed",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class RegionState:
+    """One device's region population + finalised accumulators."""
+
+    centers: jnp.ndarray  # (C, d)
+    halfw: jnp.ndarray  # (C, d)
+    est: jnp.ndarray  # (C,)   degree-7 estimate
+    err: jnp.ndarray  # (C,)   heuristic error estimate
+    axis: jnp.ndarray  # (C,)   int32 split axis
+    active: jnp.ndarray  # (C,)   bool
+    fresh: jnp.ndarray  # (C,)   bool — needs (re-)evaluation
+    fin_integral: jnp.ndarray  # ()  accumulated finalised integral
+    fin_error: jnp.ndarray  # ()  accumulated finalised error
+    n_evals: jnp.ndarray  # ()  float64 integrand-evaluation counter
+    it: jnp.ndarray  # ()  int32 iteration counter
+    overflowed: jnp.ndarray  # () bool — capacity pressure was ever hit
+
+    @property
+    def capacity(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.centers.shape[1]
+
+    def n_active(self) -> jnp.ndarray:
+        return jnp.sum(self.active)
+
+    def global_estimates(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(integral, error) combining finalised + active contributions."""
+        act = self.active
+        integral = self.fin_integral + jnp.sum(jnp.where(act, self.est, 0.0))
+        error = self.fin_error + jnp.sum(jnp.where(act, self.err, 0.0))
+        return integral, error
+
+
+def empty_state(capacity: int, d: int, dtype) -> RegionState:
+    z = jnp.zeros
+    return RegionState(
+        centers=z((capacity, d), dtype),
+        halfw=z((capacity, d), dtype),
+        est=z((capacity,), dtype),
+        err=z((capacity,), dtype),
+        axis=z((capacity,), jnp.int32),
+        active=z((capacity,), bool),
+        fresh=z((capacity,), bool),
+        fin_integral=jnp.asarray(0.0, dtype),
+        fin_error=jnp.asarray(0.0, dtype),
+        n_evals=jnp.asarray(0.0, dtype),
+        it=jnp.asarray(0, jnp.int32),
+        overflowed=jnp.asarray(False, bool),
+    )
+
+
+def uniform_partition(
+    lo: np.ndarray, hi: np.ndarray, n_boxes: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Bisect [lo, hi] into ``n_boxes`` (power of two) equal boxes.
+
+    Axes are cycled in round-robin order, so the partition stays as cubic as
+    possible — this is the paper's "initial uniform partition".
+    Returns (centers, halfw) as float64 arrays of shape (n_boxes, d).
+    """
+    lo = np.asarray(lo, np.float64)
+    hi = np.asarray(hi, np.float64)
+    d = lo.shape[0]
+    assert n_boxes & (n_boxes - 1) == 0, "n_boxes must be a power of two"
+    boxes = [(lo.copy(), hi.copy())]
+    level = 0
+    while len(boxes) < n_boxes:
+        axis = level % d
+        nxt = []
+        for blo, bhi in boxes:
+            mid = 0.5 * (blo[axis] + bhi[axis])
+            left_hi = bhi.copy()
+            left_hi[axis] = mid
+            right_lo = blo.copy()
+            right_lo[axis] = mid
+            nxt.append((blo, left_hi))
+            nxt.append((right_lo, bhi))
+        boxes = nxt
+        level += 1
+    centers = np.stack([0.5 * (b[0] + b[1]) for b in boxes])
+    halfw = np.stack([0.5 * (b[1] - b[0]) for b in boxes])
+    return centers, halfw
+
+
+def init_state(
+    capacity: int,
+    lo: np.ndarray,
+    hi: np.ndarray,
+    n_init: int,
+    dtype,
+) -> RegionState:
+    """Fresh state holding the initial uniform partition."""
+    lo = np.asarray(lo, np.float64)
+    d = lo.shape[0]
+    centers, halfw = uniform_partition(lo, hi, n_init)
+    st = empty_state(capacity, d, dtype)
+    st = dataclasses.replace(
+        st,
+        centers=st.centers.at[:n_init].set(jnp.asarray(centers, dtype)),
+        halfw=st.halfw.at[:n_init].set(jnp.asarray(halfw, dtype)),
+        active=st.active.at[:n_init].set(True),
+        fresh=st.fresh.at[:n_init].set(True),
+    )
+    return st
+
+
+def check_invariants(state: RegionState, lo, hi, atol: float = 1e-12) -> None:
+    """Host-side structural checks (used by tests, not in the hot path)."""
+    c = np.asarray(state.centers)
+    h = np.asarray(state.halfw)
+    act = np.asarray(state.active)
+    assert np.all(h[act] > 0), "active region with non-positive halfwidth"
+    assert np.all(c[act] - h[act] >= np.asarray(lo) - atol), "region below domain"
+    assert np.all(c[act] + h[act] <= np.asarray(hi) + atol), "region above domain"
+    fresh = np.asarray(state.fresh)
+    assert not np.any(fresh & ~act), "fresh flag set on inactive slot"

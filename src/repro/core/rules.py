@@ -1,0 +1,116 @@
+"""Pluggable quadrature-rule layer (paper: "accommodates multiple rules")."""
+
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import jax.numpy as jnp
+
+from repro.core import gauss_kronrod, genz_malik
+from repro.core.config import QuadratureConfig
+from repro.core.error import two_level_error
+from repro.core.integrands import get as get_integrand
+
+
+class Rule(Protocol):
+    n_evals_per_region: int
+
+    def eval_batch(
+        self, centers: jnp.ndarray, halfw: jnp.ndarray
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(B, d) regions -> (est, err, split_axis) each of shape (B,)."""
+        ...
+
+
+def _select_axis(diffs: jnp.ndarray, halfw: jnp.ndarray) -> jnp.ndarray:
+    """argmax fourth-difference; fall back to widest axis when flat."""
+    eps = jnp.finfo(diffs.dtype).eps
+    best = jnp.argmax(diffs, axis=-1).astype(jnp.int32)
+    widest = jnp.argmax(halfw, axis=-1).astype(jnp.int32)
+    flat = jnp.max(diffs, axis=-1) <= eps * 100.0
+    return jnp.where(flat, widest, best)
+
+
+class GenzMalikRule:
+    """Degree-7 GM rule + two-level error + fourth-difference axis choice."""
+
+    def __init__(
+        self,
+        d: int,
+        integrand: Callable[[jnp.ndarray], jnp.ndarray],
+        noise_mult: float = 50.0,
+        use_kernel: bool = False,
+        interpret: bool = True,
+        block_regions: int = 256,
+    ):
+        self.d = d
+        self.f = integrand
+        self.noise_mult = noise_mult
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.block_regions = block_regions
+        self.n_evals_per_region = genz_malik.n_nodes(d)
+
+    def eval_batch(self, centers, halfw):
+        if self.use_kernel:
+            from repro.kernels import ops as kernel_ops
+
+            i7, i5, i3, diffs = kernel_ops.genz_malik_eval(
+                self.f,
+                centers,
+                halfw,
+                interpret=self.interpret,
+                block_regions=self.block_regions,
+            )
+        else:
+            i7, i5, i3, diffs = genz_malik.gm_eval_reference(self.f, centers, halfw)
+        vol = jnp.prod(2.0 * halfw, axis=-1)
+        maxdiff = jnp.max(diffs, axis=-1)
+        err = two_level_error(i7, i5, i3, vol, maxdiff, self.noise_mult)
+        axis = _select_axis(diffs, halfw)
+        return i7, err, axis
+
+
+class GaussKronrodRule:
+    """Tensor-product (G7, K15); cost 15^d — low/moderate d only (paper)."""
+
+    def __init__(
+        self,
+        d: int,
+        integrand: Callable[[jnp.ndarray], jnp.ndarray],
+        chunk: int = 512,
+        safety: float = 1.0,
+    ):
+        if d > 6:
+            raise ValueError(
+                f"tensor Gauss-Kronrod is prohibitive for d={d} (15^d nodes); "
+                "the paper restricts it to low/moderate dimensions"
+            )
+        self.d = d
+        self.f = integrand
+        self.chunk = chunk
+        self.safety = safety
+        self.n_evals_per_region = gauss_kronrod.n_nodes(d)
+
+    def eval_batch(self, centers, halfw):
+        i_k, i_g, axis_disc = gauss_kronrod.gk_eval_batch(
+            self.f, centers, halfw, chunk=self.chunk
+        )
+        err = self.safety * jnp.abs(i_k - i_g)
+        # round-off floor
+        eps = jnp.finfo(i_k.dtype).eps
+        vol = jnp.prod(2.0 * halfw, axis=-1)
+        err = jnp.maximum(err, 50.0 * eps * (jnp.abs(i_k) + vol))
+        axis = _select_axis(axis_disc, halfw)
+        return i_k, err, axis
+
+
+def make_rule(cfg: QuadratureConfig, integrand=None) -> Rule:
+    f = integrand if integrand is not None else get_integrand(cfg.integrand).fn
+    if cfg.rule == "genz_malik":
+        return GenzMalikRule(
+            cfg.d, f, noise_mult=cfg.noise_mult, use_kernel=cfg.use_kernel
+        )
+    if cfg.rule == "gauss_kronrod":
+        return GaussKronrodRule(cfg.d, f)
+    raise ValueError(f"unknown rule {cfg.rule!r}")

@@ -1,0 +1,131 @@
+"""Fused filter + split + compaction (the paper's fused GPU stage).
+
+One sort-based pass that (i) folds finalised regions into the scalar
+accumulators, (ii) compacts survivors to the front ordered by descending
+error, and (iii) splits as many survivors as capacity allows along their
+assigned axes (children replace the parent slot and append after the
+survivor block, so all fresh children occupy a predictable range).
+
+On GPU the paper fuses filtering and splitting into a single kernel to cut
+data movement; under XLA the whole step is one compiled module, so the fusion
+here is algorithmic (single argsort, single gather) rather than a hand-written
+kernel — see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.region_store import RegionState
+
+
+def classify_split_compact(
+    state: RegionState, finalize_mask: jnp.ndarray
+) -> RegionState:
+    """Apply the classifier verdict, then split every surviving region.
+
+    Under capacity pressure only the top-(free slots) regions by error are
+    split; the rest stay active-but-unsplit (their estimates remain valid,
+    they are split on a later iteration).  ``overflowed`` records that
+    pressure was ever hit — this is the feasibility limit of Fig. 3a.
+    """
+    C = state.capacity
+    fin = finalize_mask & state.active
+    fin_integral = state.fin_integral + jnp.sum(jnp.where(fin, state.est, 0.0))
+    fin_error = state.fin_error + jnp.sum(jnp.where(fin, state.err, 0.0))
+    active = state.active & ~fin
+
+    # Sort key: survivors by descending error first, then freed/inactive slots.
+    big = jnp.asarray(jnp.finfo(state.err.dtype).max, state.err.dtype)
+    key = jnp.where(active, -state.err, big)
+    perm = jnp.argsort(key)
+
+    centers = state.centers[perm]
+    halfw = state.halfw[perm]
+    est = state.est[perm]
+    err = state.err[perm]
+    axis = state.axis[perm]
+    active = active[perm]
+
+    n_act = jnp.sum(active)
+    idx = jnp.arange(C)
+
+    # Graceful degradation under memory pressure (the paper's Fig. 3a
+    # feasibility limit): if the store is nearly full, force-finalise the
+    # *lowest-error* tail so splitting can always make progress.  Their
+    # (conservative) error estimates are folded into the accumulators, so the
+    # global bound remains honest; without this, a full store deadlocks
+    # (n_act == C allows zero splits and the classifier threshold, which
+    # scales as budget/n_act, can no longer finalise anything).
+    limit = 3 * C // 4
+    forced = active & (idx >= limit)
+    fin_integral = fin_integral + jnp.sum(jnp.where(forced, est, 0.0))
+    fin_error = fin_error + jnp.sum(jnp.where(forced, err, 0.0))
+    active = active & ~forced
+    n_act = jnp.minimum(n_act, limit)
+
+    k = jnp.minimum(n_act, C - n_act)  # number of regions we can split (+1 slot each)
+    overflowed = state.overflowed | (k < n_act) | jnp.any(forced)
+
+    split_row = idx < k  # rows being split (highest error first)
+
+    onehot = jnp.arange(state.d)[None, :] == axis[:, None]  # (C, d)
+    h_half = jnp.where(onehot, 0.5 * halfw, halfw)
+    # children tile the parent exactly: centres at c -+ h/2 along the axis
+    shift = jnp.where(onehot, h_half, 0.0)
+
+    child_a_centers = centers - shift
+    child_b_centers = centers + shift
+
+    # Child A overwrites the parent row.
+    centers = jnp.where(split_row[:, None], child_a_centers, centers)
+    halfw = jnp.where(split_row[:, None], h_half, halfw)
+
+    # Child B appended after the survivor block in REVERSED error order
+    # (row i -> n_act + k - 1 - i), so the occupied block's tail holds the
+    # children of the highest-error parents — the redistribution layer sends
+    # the tail window, which is then exactly "the largest-error subregions,
+    # chosen after sorting" (paper §3) while keeping the block contiguous.
+    dest = jnp.where(split_row, n_act + k - 1 - idx, C)  # C == OOB, dropped
+    centers = centers.at[dest].set(child_b_centers, mode="drop")
+    halfw = halfw.at[dest].set(h_half, mode="drop")
+
+    active = active | (idx < n_act + k)
+    fresh = split_row | ((idx >= n_act) & (idx < n_act + k))
+    # Invalidate stale values on fresh rows so masked reductions stay exact.
+    est = jnp.where(fresh, 0.0, est)
+    err = jnp.where(fresh, 0.0, err)
+    axis = jnp.where(fresh, 0, axis)
+
+    return dataclasses.replace(
+        state,
+        centers=centers,
+        halfw=halfw,
+        est=est,
+        err=err,
+        axis=axis,
+        active=active,
+        fresh=fresh & active,
+        fin_integral=fin_integral,
+        fin_error=fin_error,
+        overflowed=overflowed,
+    )
+
+
+def compact(state: RegionState) -> RegionState:
+    """Compact actives to the front by descending error (no split)."""
+    big = jnp.asarray(jnp.finfo(state.err.dtype).max, state.err.dtype)
+    key = jnp.where(state.active, -state.err, big)
+    perm = jnp.argsort(key)
+    return dataclasses.replace(
+        state,
+        centers=state.centers[perm],
+        halfw=state.halfw[perm],
+        est=state.est[perm],
+        err=state.err[perm],
+        axis=state.axis[perm],
+        active=state.active[perm],
+        fresh=state.fresh[perm],
+    )

@@ -1,0 +1,191 @@
+"""Mesh-aware sharding rules: logical activation/parameter axes -> mesh axes.
+
+One rules table maps *logical* axis names to mesh axes; `shard()` applies a
+constraint only when a mesh context is active, so the same model code runs
+single-device (tests) and multi-pod (dry-run/production) unchanged.
+
+Divisibility fallback: a dimension that does not divide by its mesh-axis
+size is replicated instead (GSPMD padding wastes memory silently; an
+explicit fallback keeps `memory_analysis` honest and is reported by
+`explain()` so the roofline table can show where TP degraded).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "tokens": ("pod", "data"),  # flattened (B*S) token axis (MoE routing)
+    "seq": None,
+    "embed": None,  # d_model on ACTIVATIONS: replicated (pure TP residual)
+    "fsdp": "data",  # d_model/large dim on PARAMETERS: FSDP over the data
+    #                  axis (weights gathered per-layer, grads reduce-
+    #                  scattered) — without this, >30B-param archs cannot
+    #                  fit 16 GB/chip (iteration-0 dry-run: qwen3-moe needed
+    #                  58 GB/chip for fp32 params alone)
+    "heads": "model",  # attention heads (TP)
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",  # MLP hidden (TP column/row pair)
+    "vocab": "model",  # logits/head vocab dim (matmul — shards cleanly)
+    "vocab_rows": "model",  # embedding-table ROW dim: gather-accessed; serving
+    #                         overrides to None (SPMD lowers a gather from a
+    #                         row-sharded table by replicating the table)
+    "experts": "model",  # expert parallelism
+    "expert_cap": ("pod", "data"),  # dispatch-buffer token-capacity dim
+    "ssm_inner": "model",  # mamba d_inner / conv channels
+    "ssm_heads": "model",
+    "state": None,
+    "kv_seq": None,  # KV-cache sequence dim (long-context variant: "model")
+    "mla_rank": None,  # MLA latent rank dim (decode hillclimb: "model" — the
+    #                    per-token cache INSERT stays local, the per-block
+    #                    score contraction pays a small psum instead)
+    "lora": None,
+    "zero1": ("pod", "data"),  # optimizer-state sharding (ZeRO-1)
+}
+
+_CTX = threading.local()
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES, **(rules or {}))
+        self.fallbacks: list[tuple[str, int, int]] = []
+
+    def axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+
+    def spec(self, dims: tuple[int, ...], names: tuple[Optional[str], ...]) -> P:
+        assert len(dims) == len(names), (dims, names)
+        used: set[str] = set()
+        parts = []
+        for dim, name in zip(dims, names):
+            mesh_axes = self.rules.get(name) if name else None
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            axes = tuple(a for a in axes if a in self.mesh.shape and a not in used)
+            size = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+            if not axes or size <= 1:
+                parts.append(None)
+                continue
+            if dim % size != 0:
+                self.fallbacks.append((name or "?", dim, size))
+                parts.append(None)
+                continue
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else axes)
+        return P(*parts)
+
+    def named(self, dims, names) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(dims, names))
+
+
+@contextmanager
+def mesh_rules(mesh: Mesh, rules: Optional[dict] = None):
+    prev = getattr(_CTX, "ctx", None)
+    _CTX.ctx = ShardingCtx(mesh, rules or {})
+    try:
+        yield _CTX.ctx
+    finally:
+        _CTX.ctx = prev
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_CTX, "ctx", None)
+
+
+def shard(x, *names):
+    """Constrain activation x to the logical axes `names` (None = replicate)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = ctx.spec(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# --- parameter sharding rules (by pytree path suffix) -------------------------
+
+_PARAM_AXES = [
+    # (path fragment, logical axes per dim) — two-axis (FSDP x TP) sharding
+    ("embed/table", ("vocab_rows", "fsdp")),
+    ("head/w", ("fsdp", "vocab")),
+    ("wq_a", ("fsdp", "lora")),
+    ("wq_b", ("lora", "heads_flat")),
+    ("w_kv_a", ("fsdp", "lora")),
+    ("w_k_b", ("lora", "heads_flat")),
+    ("w_v_b", ("lora", "heads_flat")),
+    ("wq", ("fsdp", "heads_flat")),
+    ("wk", ("fsdp", "kv_flat")),
+    ("wv", ("fsdp", "kv_flat")),
+    ("wo", ("heads_flat", "fsdp")),
+    ("w_gate", None),  # resolved by rank below (dense vs expert)
+    ("w_up", None),
+    ("w_down", None),
+    ("router", ("fsdp", None)),
+    ("in_proj", ("fsdp", "ssm_inner")),
+    ("out_proj", ("ssm_inner", "fsdp")),
+    ("conv_w", (None, "ssm_inner")),
+]
+
+# flattened head projections: output dim = heads * head_dim -> shard on model
+_EXTRA_RULES = {"heads_flat": "model", "kv_flat": "model"}
+
+
+def param_logical_axes(path: str, shape: tuple[int, ...]):
+    """Logical axes for a parameter leaf, by name + rank heuristics."""
+    for frag, axes in _PARAM_AXES:
+        if path.endswith(frag) or f"/{frag}" in path:
+            if axes is not None:
+                return axes
+            # w_gate / w_up / w_down: dense (2-D) vs expert (3-D).
+            # Expert FFNs put the FSDP axis on the FFN dim, not d_model:
+            # d_model is the einsum contraction dim and sharding it makes
+            # SPMD gather the weights (60 GiB/chip on MoE decode); sharding
+            # f keeps the contraction local and the combine a small AR.
+            if len(shape) == 3:
+                if path.endswith("w_down") or "/w_down" in path:
+                    return ("experts", "fsdp", None)
+                return ("experts", None, "fsdp")
+            if path.endswith("w_down") or "/w_down" in path:
+                return ("ff", "fsdp")
+            return ("fsdp", "ff")
+    return tuple(None for _ in shape)  # norms, scalars: replicated
+
+
+def param_spec_tree(params_shape, mesh: Mesh, rules: Optional[dict] = None):
+    """PartitionSpec pytree for a (possibly abstract) params pytree."""
+    ctx = ShardingCtx(mesh, dict(_EXTRA_RULES, **(rules or {})))
+
+    def leaf_spec(path, leaf):
+        pathstr = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        # Scanned layer stacks carry a leading period axis: strip it BEFORE
+        # the name/rank matching (a stacked expert tensor is 4-D and a
+        # stacked dense MLP is 3-D — rank heuristics on the stacked shape
+        # mis-assign both), then re-prepend a replicated axis.
+        stacked = "layers/" in pathstr or pathstr.startswith("layers")
+        base_shape = leaf.shape[1:] if stacked and leaf.ndim >= 2 else leaf.shape
+        names = param_logical_axes(pathstr, base_shape)
+        if len(names) != len(base_shape):
+            names = tuple(None for _ in base_shape)
+        if base_shape is not leaf.shape:
+            names = (None,) + tuple(names)
+        return ctx.spec(leaf.shape, names)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`genz_malik_eval` is the entry point used by
+:class:`repro.core.rules.GenzMalikRule` when ``use_kernel=True``.  It adapts
+the region store's AoS ``(B, d)`` layout to the kernel's SoA ``(d, B)``
+layout, pads the batch to the block size, and dispatches to the fused
+Pallas kernel (``interpret=True`` executes the kernel body on CPU — the
+validation mode for this container; on TPU pass ``interpret=False``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.kernels.genz_malik_eval import genz_malik_eval_soa
+
+# Default chosen by the VMEM budget sweep in EXPERIMENTS.md §Perf: the
+# working set per block is ~(4 + 4d) * BLOCK * 4 bytes; 512 lanes keeps the
+# d=13 worst case ~110 KiB, far under the ~16 MiB v5e VMEM, while giving the
+# MXU-free VPU pipeline full 128-lane occupancy x 4 sublane tiles.
+DEFAULT_BLOCK_REGIONS = 512
+
+
+def genz_malik_eval(
+    f: Callable[[jnp.ndarray], jnp.ndarray],
+    centers: jnp.ndarray,  # (B, d) AoS, as stored by RegionState
+    halfw: jnp.ndarray,  # (B, d)
+    *,
+    block_regions: int = DEFAULT_BLOCK_REGIONS,
+    interpret: bool = True,
+):
+    """Fused GM rule evaluation. Returns (i7, i5, i3, diffs[B, d])."""
+    b, d = centers.shape
+    block = min(block_regions, b) if b % block_regions else block_regions
+    pad = (-b) % block
+    ct = centers.T
+    ht = halfw.T
+    if pad:
+        ct = jnp.pad(ct, ((0, 0), (0, pad)))
+        # halfwidth 1 on padded lanes avoids spurious inf/nan in integrands
+        ht = jnp.pad(ht, ((0, 0), (0, pad)), constant_values=1.0)
+    i7, i5, i3, diffs = genz_malik_eval_soa(
+        f, ct, ht, block_regions=block, interpret=interpret
+    )
+    return i7[:b], i5[:b], i3[:b], diffs[:, :b].T

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused GM evaluation kernel.
+
+Delegates to :func:`repro.core.genz_malik.gm_eval_reference` — a single
+source of truth for weights/generators shared by kernel and oracle — but
+exposes the kernel's SoA ``(d, N)`` calling convention so tests compare
+byte-identical interfaces.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.genz_malik import gm_eval_reference
+
+
+def genz_malik_eval_soa_ref(
+    f: Callable[[jnp.ndarray], jnp.ndarray],
+    centers: jnp.ndarray,  # (d, N)
+    halfw: jnp.ndarray,  # (d, N)
+):
+    """Reference with the same signature/layout as the Pallas kernel."""
+    i7, i5, i3, diffs = gm_eval_reference(f, centers.T, halfw.T)
+    return i7, i5, i3, diffs.T  # diffs back to (d, N)

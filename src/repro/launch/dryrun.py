@@ -1,0 +1,421 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import anywhere in the process:
+jax locks the device count on first backend initialisation.  smoke tests and
+benchmarks never import this module, so they see the real single CPU device.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) or (2,16,16)),
+  2. derives parameter/optimizer/cache/batch shardings from the rules engine,
+  3. ``jit(step).lower(abstract inputs).compile()`` — proving the sharding
+     config is coherent (no shape mismatch, no unsupported collective, fits
+     memory),
+  4. records memory_analysis(), cost_analysis() and the per-device collective
+     byte counts parsed from the partitioned HLO (§Roofline input).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out results/dryrun] [--microbatches N]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import ShardingCtx, mesh_rules, param_spec_tree
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_status, input_specs
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    cache_init,
+    model_decode,
+    model_forward,
+    model_init,
+    model_prefill,
+    model_prefill_chunked,
+)
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train import TrainConfig, make_train_step
+
+# --------------------------------------------------------------------------
+# sharding spec builders
+# --------------------------------------------------------------------------
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "embeds": ("batch", "seq", "embed"),
+    "token": ("batch",),
+}
+
+
+def batch_spec_tree(batch_abstract, ctx: ShardingCtx):
+    return {
+        k: NamedSharding(ctx.mesh, ctx.spec(v.shape, _BATCH_AXES[k]))
+        for k, v in batch_abstract.items()
+    }
+
+
+def cache_logical_axes(path: str, ndim: int, rules: dict):
+    """Logical names for a cache leaf (leading dim may be the period stack)."""
+    if path.endswith("/k") or path.endswith("/v"):
+        names = ("batch", "kv_seq", "kv_heads", "head_dim")
+    elif path.endswith("c_kv") or path.endswith("k_rope"):
+        names = ("batch", "kv_seq", "mla_rank")
+    elif path.endswith("ssm"):
+        names = ("batch", "ssm_heads", None, None)
+    elif path.endswith("conv"):
+        names = ("batch", None, "ssm_inner")
+    else:
+        names = tuple(None for _ in range(ndim))
+    if len(names) == ndim - 1:
+        names = (None,) + names
+    assert len(names) == ndim, (path, names, ndim)
+    return names
+
+
+def cache_spec_tree(cache_abstract, ctx: ShardingCtx, rules: dict):
+    def leaf(path, x):
+        pathstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        names = cache_logical_axes(pathstr, x.ndim, rules)
+        return NamedSharding(ctx.mesh, ctx.spec(x.shape, names))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abstract)
+
+
+# --------------------------------------------------------------------------
+# step builders (shared with benchmarks.roofline)
+# --------------------------------------------------------------------------
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    *,
+    microbatches: int = 8,
+    remat: str = "full",
+    zero1: bool = False,
+    rules: dict | None = None,
+):
+    """Returns (fn, example_args, in_shardings, donate) for jit lowering."""
+    shape = SHAPES[shape_name]
+    rules = dict(rules or {})
+    model_ways = mesh.shape.get("model", 1)
+    heads_shardable = (not cfg.use_mla) and cfg.n_kv_heads % model_ways == 0
+    if shape.kind == "decode" and cfg.use_mla:
+        # hillclimb C (confirmed): shard the MLA latent cache on its RANK dim
+        # — the per-token insert stays device-local (seq-sharding forces SPMD
+        # to rematerialize the whole cache per step) and the score
+        # contraction pays only a small per-block psum.  1.41 -> 0.37 GiB
+        # collectives, 8.0 -> 7.0 GiB temps on deepseek-v2 decode_32k.
+        rules.setdefault("mla_rank", "model")
+        rules.setdefault("kv_seq", None)
+    elif shape.kind == "decode" and not heads_shardable:
+        # sequence-parallel KV/latent cache: GQA kv-head counts (4/8) and the
+        # MLA latent (no head dim at all) cannot shard over the 16-way model
+        # axis; replicating a 32k-context cache costs 18-25 GiB/chip, so the
+        # cache shards its SEQUENCE dim instead (blockwise attention streams
+        # blocks, so each step touches one shard's worth per block)
+        rules.setdefault("kv_seq", "model")
+        rules.setdefault("kv_heads", None)
+    if shape.kind != "train":
+        # embedding-table rows stay unsharded when serving: SPMD lowers a
+        # gather from a row-sharded table via full replication ("involuntary
+        # full rematerialization" warnings + tens of GiB of temps)
+        rules.setdefault("vocab_rows", None)
+    ctx = ShardingCtx(mesh, rules)
+
+    abstract_params = jax.eval_shape(partial(model_init, cfg), jax.random.PRNGKey(0))
+    if shape.kind != "train":
+        # serving deploys bf16 checkpoints (fp32 masters are a training
+        # concern); >=2-D leaves are the weight matrices
+        abstract_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.ndim >= 2 else s.dtype
+            ),
+            abstract_params,
+        )
+    p_spec = param_spec_tree(abstract_params, mesh, rules)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec)
+    batch = input_specs(cfg, shape)
+    b_shard = batch_spec_tree(batch, ctx)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            remat=remat,
+            microbatches=microbatches,
+            opt=OptimizerConfig(zero1=zero1),
+        )
+        abstract_opt = jax.eval_shape(
+            partial(init_opt_state, tcfg.opt), abstract_params
+        )
+        o_spec = param_spec_tree(
+            {"mu": abstract_opt["mu"], "nu": abstract_opt["nu"]}, mesh, rules
+        )
+        o_shard = {
+            "mu": jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec["mu"]),
+            "nu": jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec["nu"]),
+            "count": NamedSharding(mesh, P()),
+        }
+        step = make_train_step(cfg, tcfg, param_shardings=p_shard)
+
+        def fn(params, opt_state, batch):
+            with mesh_rules(mesh, rules):
+                return step(params, opt_state, batch)
+
+        args = (abstract_params, abstract_opt, batch)
+        shardings = (p_shard, o_shard, b_shard)
+        return fn, args, shardings, (0, 1)
+
+    if shape.kind == "prefill":
+        if not cfg.has_decode:  # encoder-only: plain forward
+            def fn(params, batch):
+                with mesh_rules(mesh, rules):
+                    logits, _ = model_forward(cfg, params, **batch)
+                    return logits
+
+            return fn, (abstract_params, batch), (p_shard, b_shard), ()
+
+        abstract_cache = jax.eval_shape(
+            partial(cache_init, cfg, shape.global_batch, shape.seq_len)
+        )
+        c_shard = cache_spec_tree(abstract_cache, ctx, rules)
+        # long prompts run the chunked (Sarathi-style) prefill so the MoE
+        # dispatch / attention working set is bounded by the chunk
+        chunk = 4096 if shape.seq_len >= 8192 else None
+
+        def fn(params, batch, caches):
+            with mesh_rules(mesh, rules):
+                if chunk is not None:
+                    return model_prefill_chunked(
+                        cfg, params, batch.get("tokens"), caches, chunk,
+                        embeds=batch.get("embeds"),
+                    )
+                return model_prefill(
+                    cfg,
+                    params,
+                    batch.get("tokens"),
+                    caches,
+                    embeds=batch.get("embeds"),
+                )
+
+        args = (abstract_params, batch, abstract_cache)
+        return fn, args, (p_shard, b_shard, c_shard), (2,)
+
+    # decode: one token against a full-length cache
+    abstract_cache = jax.eval_shape(
+        partial(cache_init, cfg, shape.global_batch, shape.seq_len)
+    )
+    c_shard = cache_spec_tree(abstract_cache, ctx, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, token, caches, pos):
+        with mesh_rules(mesh, rules):
+            return model_decode(cfg, params, token, caches, pos)
+
+    args = (abstract_params, batch["token"], abstract_cache, pos)
+    tok_shard = b_shard["token"]
+    return fn, args, (p_shard, tok_shard, c_shard, NamedSharding(mesh, P())), (2,)
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}\s]*?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device payload bytes by collective kind, from partitioned HLO.
+
+    Shapes in the post-SPMD module are PER-DEVICE, so summed output bytes
+    approximate the per-device link payload (all-reduce is counted twice:
+    reduce-scatter + all-gather phases of a ring implementation).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(sig)
+        if kind == "all-reduce":
+            nbytes *= 2  # ring AR = RS + AG passes
+        out[kind] += nbytes
+        out["count"] += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+
+# Per-arch gradient-accumulation defaults (train_4k): chosen by the memory/
+# collective sweep in EXPERIMENTS.md §Perf — more microbatches shrink saved
+# activations but re-gather FSDP weights per microbatch, so the sweet spot
+# moves with model size.
+MICROBATCH_DEFAULTS = {
+    "qwen3-32b": 16,
+    "jamba-v0.1-52b": 16,
+    "qwen3-moe-235b-a22b": 16,
+    "deepseek-v2-236b": 16,
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, **kw) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_status(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "skip" if skip else "pending",
+    }
+    if skip:
+        rec["reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, shardings, donate = build_cell(cfg, shape_name, mesh, **kw)
+        lowered = jax.jit(
+            fn, in_shardings=shardings, donate_argnums=donate
+        ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=float(cost.get("flops", -1)) if cost else -1,
+            bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
+            collectives=coll,
+        )
+        if mem is not None:
+            for field in (
+                "temp_size_in_bytes",
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                val = getattr(mem, field, None)
+                if val is not None:
+                    rec[field] = int(val)
+        return rec
+    except Exception as e:  # noqa: BLE001 — a failed cell is a reportable bug
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}"[:2000])
+        return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--zero1", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                mb = (
+                    MICROBATCH_DEFAULTS.get(arch, args.microbatches)
+                    if args.microbatches == 8
+                    else args.microbatches
+                )
+                rec = run_cell(
+                    arch,
+                    shape,
+                    multi,
+                    microbatches=mb,
+                    remat=args.remat,
+                    zero1=args.zero1,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(
+                    f"[{rec['status']:4}] {tag} "
+                    + (
+                        f"flops={rec.get('flops', 0):.3g} "
+                        f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                        f"coll={sum(v for k, v in rec.get('collectives', {}).items() if k != 'count')/2**20:.1f}MiB"
+                        if rec["status"] == "ok"
+                        else rec.get("reason", rec.get("error", ""))[:200]
+                    ),
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

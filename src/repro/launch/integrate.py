@@ -1,0 +1,72 @@
+"""Quadrature launcher (the paper's solver as a CLI).
+
+Single device:
+  PYTHONPATH=src python -m repro.launch.integrate --integrand f4 --d 5 --rel-tol 1e-7
+Distributed (one process, N local devices — same code on a real mesh):
+  PYTHONPATH=src python -m repro.launch.integrate --devices 8 --integrand f6 --d 5
+"""
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--integrand", default="f4")
+    ap.add_argument("--d", type=int, default=5)
+    ap.add_argument("--rel-tol", type=float, default=1e-7)
+    ap.add_argument("--capacity", type=int, default=1 << 15)
+    ap.add_argument("--classifier", default="robust", choices=["robust", "aggressive"])
+    ap.add_argument("--rule", default="genz_malik", choices=["genz_malik", "gauss_kronrod"])
+    ap.add_argument("--use-kernel", action="store_true", help="Pallas GM kernel")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--message-cap", type=int, default=512)
+    ap.add_argument("--device-loop", action="store_true", help="lax.while_loop driver")
+    args = ap.parse_args()
+
+    if args.devices > 1 and os.environ.get("_REPRO_INT_WORKER") != "1":
+        env = dict(os.environ)
+        env["_REPRO_INT_WORKER"] = "1"
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + env.get("XLA_FLAGS", "")
+        )
+        sys.exit(os.spawnvpe(os.P_WAIT, sys.executable, [sys.executable] + sys.argv, env))
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core import QuadratureConfig, integrate, integrate_device
+    from repro.core.distributed import integrate_distributed
+    from repro.core.integrands import REGISTRY
+
+    cfg = QuadratureConfig(
+        d=args.d,
+        integrand=args.integrand,
+        rel_tol=args.rel_tol,
+        capacity=args.capacity,
+        classifier=args.classifier,
+        rule=args.rule,
+        use_kernel=args.use_kernel,
+        message_cap=args.message_cap,
+    )
+    if args.devices > 1:
+        res = integrate_distributed(cfg)
+        print(res.summary())
+        print(f"devices={res.n_devices} mean_imbalance={res.mean_imbalance():.3f}")
+    elif args.device_loop:
+        res = integrate_device(cfg)
+        print(res.summary())
+    else:
+        res = integrate(cfg)
+        print(res.summary())
+    if args.integrand in REGISTRY:
+        exact = REGISTRY[args.integrand].exact(args.d)
+        rel = abs(res.integral - exact) / max(abs(exact), 1e-300)
+        print(f"exact={exact:.15e} true_rel_err={rel:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialisation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod" axis is
+    pure data parallelism whose collectives cross the DCN/ICI pod boundary.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_quadrature_mesh(n_devices: int | None = None):
+    """1-D device ring for the distributed quadrature engine."""
+    devices = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    return jax.make_mesh((len(devices),), ("dev",), devices=devices)

@@ -1,0 +1,88 @@
+"""Assigned input-shape grid + abstract input specs (no allocation).
+
+Every (arch x shape) cell resolves to a step kind:
+  train_4k    -> train_step   (fwd+bwd+optimizer)
+  prefill_32k -> serve prefill (encoder forward for encoder-only archs)
+  decode_32k  -> serve decode  (one token against a full KV/state cache)
+  long_500k   -> serve decode at 524288 context (sub-quadratic archs only)
+
+Skip rules (DESIGN.md §5): full-attention archs skip long_500k;
+encoder-only archs (hubert) skip both decode shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; otherwise the documented skip reason."""
+    if shape.kind == "decode" and not cfg.has_decode:
+        return "skip(encoder-only: no decode step)"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "skip(full quadratic attention: 500k decode out of family scope)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+
+    if cfg.family == "audio":
+        # frame embeddings from the (stubbed) conv frontend
+        if shape.kind == "train":
+            return {
+                "embeds": sd((b, s, cfg.d_model), f32),
+                "labels": sd((b, s), i32),
+            }
+        if shape.kind == "prefill":
+            return {"embeds": sd((b, s, cfg.d_model), f32)}
+        raise ValueError("encoder-only arch has no decode inputs")
+
+    if cfg.family == "vlm":
+        nf = cfg.n_frontend_tokens
+        if shape.kind == "train":
+            return {
+                "tokens": sd((b, s - nf), i32),
+                "embeds": sd((b, nf, cfg.d_model), f32),
+                "labels": sd((b, s), i32),
+                "loss_mask": sd((b, s), f32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "tokens": sd((b, s - nf), i32),
+                "embeds": sd((b, nf, cfg.d_model), f32),
+            }
+        return {"token": sd((b,), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": sd((b, s), i32)}
+    return {"token": sd((b,), i32)}

@@ -1,0 +1,98 @@
+"""Production training launcher.
+
+On a real TPU slice this runs under `jax.distributed.initialize()` with the
+production mesh; on this CPU container it runs reduced configs single-device
+(the dry-run proves the full-mesh path).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --smoke \
+      --steps 20 [--mesh single|multi|none] [--zero1] [--grad-compression bf16_ef]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.synthetic import DataConfig, batch_for_step, frame_batch_for_step
+from repro.models.model import model_init
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train import TrainConfig, make_train_step
+
+
+def build_batch(cfg, dc, step):
+    if cfg.family == "audio":
+        return frame_batch_for_step(dc, step, cfg.d_model)
+    return batch_for_step(dc, step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--grad-compression", default="none", choices=["none", "bf16_ef"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "vlm" and args.seq <= cfg.n_frontend_tokens:
+        raise SystemExit("--seq must exceed the VLM frontend token count")
+
+    tcfg = TrainConfig(
+        remat=args.remat,
+        microbatches=args.microbatches,
+        opt=OptimizerConfig(
+            lr=args.lr,
+            warmup_steps=max(2, args.steps // 10),
+            total_steps=args.steps,
+            zero1=args.zero1,
+            grad_compression=args.grad_compression,
+        ),
+    )
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq)
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(tcfg.opt, params)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        restored, start = mgr.restore({"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        print(f"resumed at step {start}")
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, {len(jax.devices())} device(s)")
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in build_batch(cfg, dc, step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(
+                f"step {step:4d} loss {float(metrics['ce_loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.2f}",
+                flush=True,
+            )
+        if mgr and step and step % args.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt})
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt}, blocking=True)
+    print(f"trained {args.steps - start} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

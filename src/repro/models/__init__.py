@@ -1,0 +1,17 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    cache_init,
+    model_decode,
+    model_forward,
+    model_init,
+    model_prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "cache_init",
+    "model_decode",
+    "model_forward",
+    "model_init",
+    "model_prefill",
+]

@@ -1,0 +1,104 @@
+"""GQA attention (with optional per-head QK-norm) + KV-cache serving path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    blockwise_attention,
+    rmsnorm,
+    rmsnorm_init,
+    truncated_normal_init,
+)
+
+
+def attn_init(cfg: ModelConfig, key):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": truncated_normal_init(k1, (cfg.d_model, cfg.n_heads * hd), 1.0),
+        "wk": truncated_normal_init(k2, (cfg.d_model, cfg.n_kv_heads * hd), 1.0),
+        "wv": truncated_normal_init(k3, (cfg.d_model, cfg.n_kv_heads * hd), 1.0),
+        "wo": truncated_normal_init(k4, (cfg.n_heads * hd, cfg.d_model), 1.0),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = rmsnorm_init(hd)
+        params["k_norm"] = rmsnorm_init(hd)
+    return params
+
+
+def _project_qkv(cfg: ModelConfig, params, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dtype = x.dtype
+    q = (x @ params["wq"].astype(dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(cfg: ModelConfig, params, x, positions, kv_block: int = 1024):
+    """Training / encoding path (no cache)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    out = blockwise_attention(q, k, v, causal=cfg.causal, kv_block=kv_block)
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_prefill(cfg: ModelConfig, params, x, positions, cache, kv_block=1024):
+    """Full-sequence forward that also fills cache[:, :S]."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    out = blockwise_attention(q, k, v, causal=cfg.causal, kv_block=kv_block)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1),
+    }
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype), cache
+
+
+def attn_extend(cfg: ModelConfig, params, x, cache, pos, kv_block: int = 2048):
+    """Extend the cache by S tokens starting at absolute position ``pos`` and
+    attend causally against everything cached so far.  S=1 is classic decode;
+    S=chunk is chunked prefill (Sarathi-style), which bounds the per-step MoE
+    dispatch/attention working set for very long prompts."""
+    b, s, _ = x.shape
+    positions = pos + jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0)),
+    }
+    out = blockwise_attention(
+        q,
+        cache["k"],
+        cache["v"],
+        causal=True,
+        q_offset=pos,
+        kv_valid_len=pos + s,
+        kv_block=kv_block,
+    )
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype), cache
+
+
+def attn_decode(cfg: ModelConfig, params, x, cache, pos, kv_block: int = 2048):
+    """One-token step: x (B, 1, d); pos () current absolute position."""
+    return attn_extend(cfg, params, x, cache, pos, kv_block=kv_block)

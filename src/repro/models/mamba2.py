@@ -1,0 +1,222 @@
+"""Mamba-2 mixer via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD form: intra-chunk duality (quadratic
+within a chunk — MXU-friendly batched matmuls) + a sequential inter-chunk
+state recurrence (lax.scan over L/chunk steps).  Decode is the O(1)
+recurrent step on the (B, H, P, N) state — which is why the ssm family runs
+the long_500k shape that quadratic attention cannot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_init, truncated_normal_init
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def mamba_init(cfg: ModelConfig, key):
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    keys = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    cd = _conv_dim(cfg)
+    return {
+        "in_proj": truncated_normal_init(keys[0], (d, proj_out), 1.0),
+        "conv_w": 0.1 * jax.random.normal(keys[1], (cfg.ssm_conv, cd), jnp.float32),
+        "conv_b": jnp.zeros((cd,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": rmsnorm_init(di),
+        "out_proj": truncated_normal_init(keys[2], (di, d), 1.0),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * ns], axis=-1)
+    return z, xbc, dt  # (..., di), (..., di + 2ns), (..., nh)
+
+
+def _causal_conv(params, xbc, conv_state=None):
+    """Depthwise causal conv over the (B, L, conv_dim) channel block.
+
+    conv_state: (B, K-1, conv_dim) holding the previous inputs (decode).
+    Returns (out, new_conv_state).
+    """
+    k = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, L + K - 1, cd)
+    w = params["conv_w"].astype(xbc.dtype)
+    out = sum(full[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    out = jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+    new_state = full[:, -(k - 1) :, :]
+    return out, new_state
+
+
+def _ssd_chunked(cfg: ModelConfig, x, dt, b_mat, c_mat, a, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P) — already the post-conv branch reshaped to heads;
+    dt: (B, L, H) positive step sizes; a: (B, L, H) = A*dt (negative);
+    b_mat/c_mat: (B, L, N) shared across heads (ngroups=1).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    B, L, H, P = x.shape
+    N = b_mat.shape[-1]
+    Q = min(cfg.ssm_chunk, L)
+    orig_len = L
+    if L % Q:
+        # pad the tail: a=0 (decay 1) and x=0 leave the recurrent state exact
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        L = L + pad
+    nc = L // Q
+    f32 = jnp.float32
+
+    xe = (x * dt[..., None]).astype(f32).reshape(B, nc, Q, H, P)
+    a = a.astype(f32).reshape(B, nc, Q, H)
+    bm = b_mat.astype(f32).reshape(B, nc, Q, N)
+    cm = c_mat.astype(f32).reshape(B, nc, Q, N)
+
+    xe = shard(xe, "batch", None, None, "ssm_heads", None)
+    a_cs = jnp.cumsum(a, axis=2)  # inclusive within-chunk cumsum
+    # intra-chunk (dual quadratic form): L[i, j] = exp(a_cs[i] - a_cs[j]), i >= j
+    seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: the upper triangle has large positive seg whose exp
+    # overflows, and inf * 0 poisons the backward pass with NaNs
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+    # the (Q, Q, H) decay block is the largest SSD intermediate — keep it
+    # sharded over batch and heads or it replicates (iteration-0 dry-run:
+    # jamba train needed 777 GiB/chip)
+    decay = shard(decay, "batch", None, None, None, "ssm_heads")
+    scores = jnp.einsum("bcin,bcjn->bcij", cm, bm)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, xe)
+
+    # per-chunk end states: sum_j B_j (x_j dt_j) exp(a_cs[-1] - a_cs[j])
+    end_decay = jnp.exp(a_cs[:, :, -1:, :] - a_cs)  # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bm, end_decay, xe)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))  # (B,nc,H)
+    init = (
+        jnp.zeros((B, H, P, N), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def scan_fn(state, inp):
+        s_c, g_c = inp  # (B,H,P,N), (B,H)
+        out_prev = state
+        state = state * g_c[:, :, None, None] + s_c
+        return state, out_prev
+
+    xs = (
+        jnp.moveaxis(chunk_states, 1, 0),  # (nc, B, H, P, N)
+        jnp.moveaxis(chunk_decay, 1, 0),  # (nc, B, H)
+    )
+    final_state, prev_states = jax.lax.scan(scan_fn, init, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, P, N)
+
+    # inter-chunk contribution: C_i (state at chunk start) decayed to i
+    in_decay = jnp.exp(a_cs)  # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cm, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y[:, :orig_len], final_state
+
+
+def mamba_forward(cfg: ModelConfig, params, x, positions=None):
+    y, _ = _mamba_seq(cfg, params, x, conv_state=None, ssm_state=None)
+    return y
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dtype),
+    }
+
+
+def mamba_prefill(cfg: ModelConfig, params, x, positions, cache):
+    y, new_cache = _mamba_seq(cfg, params, x, conv_state=None, ssm_state=None)
+    return y, new_cache
+
+
+def mamba_extend(cfg: ModelConfig, params, x, cache, pos=None):
+    """Chunked prefill / multi-token decode: carry conv+ssm state forward."""
+    return _mamba_seq(cfg, params, x, conv_state=cache["conv"], ssm_state=cache["ssm"])
+
+
+def _mamba_seq(cfg: ModelConfig, params, x, conv_state, ssm_state):
+    b, l, _ = x.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dtype = x.dtype
+    proj = x @ params["in_proj"].astype(dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(params, xbc, conv_state)
+    xs, bc = jnp.split(xbc, [di], axis=-1)
+    b_mat, c_mat = jnp.split(bc, [ns], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )  # (B,L,H)
+    dt = shard(dt, "batch", "seq", "ssm_heads")
+    a = -jnp.exp(params["a_log"])[None, None, :] * dt  # (B,L,H)
+    xh = xs.reshape(b, l, nh, hp)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    y, final_state = _ssd_chunked(cfg, xh, dt, b_mat, c_mat, a, ssm_state)
+    y = shard(y, "batch", "seq", "ssm_heads", None)
+    y = y.astype(dtype) + params["d_skip"].astype(dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    return out, {"ssm": final_state, "conv": new_conv}
+
+
+def mamba_decode(cfg: ModelConfig, params, x, cache, pos=None):
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    b, s, _ = x.shape
+    assert s == 1
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dtype = x.dtype
+    proj = x @ params["in_proj"].astype(dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, new_conv = _causal_conv(params, xbc, cache["conv"])
+    xs, bc = jnp.split(xbc, [di], axis=-1)
+    b_mat, c_mat = jnp.split(bc, [ns], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    ga = jnp.exp(-jnp.exp(params["a_log"])[None, :] * dt)  # (B,H)
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    bm = b_mat[:, 0].astype(jnp.float32)  # (B,N)
+    cm = c_mat[:, 0].astype(jnp.float32)
+    state = cache["ssm"] * ga[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh * dt[:, :, None], bm
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cm)
+    y = y.astype(dtype) + params["d_skip"].astype(dtype)[None, :, None] * xh.astype(
+        dtype
+    )
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    return out, {"ssm": state, "conv": new_conv}

@@ -1,0 +1,192 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a per-token latent ``c_kv`` of rank ``kv_lora_rank``
+plus a single shared RoPE key of ``qk_rope_head_dim`` — the serving cache
+stores only ``kv_lora_rank + qk_rope_head_dim`` floats per token regardless
+of head count (the memory win that defines the architecture).  Queries carry
+a no-RoPE part (matched against up-projected latent keys) and a RoPE part
+(matched against the shared rotary key).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    rmsnorm,
+    rmsnorm_init,
+    truncated_normal_init,
+)
+
+
+def mla_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    keys = jax.random.split(key, 8)
+    q_in = cfg.q_lora_rank or d
+    params = {
+        # queries (optionally low-rank)
+        "wq_b": truncated_normal_init(keys[1], (q_in, nh * qd), 1.0),
+        # latent KV compression + shared rotary key
+        "w_kv_a": truncated_normal_init(
+            keys[2], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), 1.0
+        ),
+        "kv_a_norm": rmsnorm_init(cfg.kv_lora_rank),
+        # latent -> per-head K_nope and V
+        "w_k_b": truncated_normal_init(
+            keys[3], (cfg.kv_lora_rank, nh * cfg.qk_nope_head_dim), 1.0
+        ),
+        "w_v_b": truncated_normal_init(
+            keys[4], (cfg.kv_lora_rank, nh * cfg.v_head_dim), 1.0
+        ),
+        "wo": truncated_normal_init(keys[5], (nh * cfg.v_head_dim, d), 1.0),
+    }
+    if cfg.q_lora_rank:
+        params["wq_a"] = truncated_normal_init(keys[0], (d, cfg.q_lora_rank), 1.0)
+        params["q_a_norm"] = rmsnorm_init(cfg.q_lora_rank)
+    return params
+
+
+def _queries(cfg: ModelConfig, params, x, positions):
+    b, s, _ = x.shape
+    dtype = x.dtype
+    nh = cfg.n_heads
+    if cfg.q_lora_rank:
+        cq = rmsnorm(params["q_a_norm"], x @ params["wq_a"].astype(dtype), cfg.norm_eps)
+    else:
+        cq = x
+    q = (cq @ params["wq_b"].astype(dtype)).reshape(
+        b, s, nh, cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(cfg: ModelConfig, params, x, positions):
+    dtype = x.dtype
+    kv = x @ params["w_kv_a"].astype(dtype)  # (B, S, rank + rope)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_a_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _attend(cfg: ModelConfig, params, q_nope, q_rope, c_kv, k_rope, kv_valid_len):
+    """Attention against the latent cache, streamed over KV blocks.
+
+    Scores are computed in the latent space: q_nope is absorbed into the
+    latent up-projection (q_nope @ w_k_b^T per head), so the cache is read
+    once per block with no per-head K materialisation — the TPU-friendly
+    "weight absorption" form of MLA decoding.
+    """
+    b, sq, nh, _ = q_nope.shape
+    dtype = q_nope.dtype
+    rank = cfg.kv_lora_rank
+    w_k_b = params["w_k_b"].astype(jnp.float32).reshape(rank, nh, cfg.qk_nope_head_dim)
+    w_v_b = params["w_v_b"].astype(jnp.float32).reshape(rank, nh, cfg.v_head_dim)
+
+    # absorb: q_lat (B, Sq, H, rank)
+    q_lat = jnp.einsum(
+        "bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_k_b
+    )
+    scale = float(1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim))
+
+    sk = c_kv.shape[1]
+    block = min(2048, sk)
+    if sk % block:
+        pad = block - sk % block
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+        sk += pad
+    n_blocks = sk // block
+    q_pos = (kv_valid_len - sq) + jnp.arange(sq)  # absolute query positions
+
+    def body(carry, blk):
+        m, l, acc = carry
+        cb = jax.lax.dynamic_slice_in_dim(c_kv, blk * block, block, 1).astype(
+            jnp.float32
+        )
+        rb = jax.lax.dynamic_slice_in_dim(k_rope, blk * block, block, 1).astype(
+            jnp.float32
+        )
+        s = jnp.einsum("bqhr,bkr->bqhk", q_lat, cb)
+        s += jnp.einsum("bqhd,bkd->bqhk", q_rope.astype(jnp.float32), rb)
+        s *= scale
+        kv_pos = blk * block + jnp.arange(block)
+        mask = (q_pos[:, None] >= kv_pos[None, :]) & (
+            kv_pos < kv_valid_len
+        )[None, :]
+        s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask[None, :, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        # accumulate in latent space; project to V after the scan
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqhk,bkr->bqhr", p, cb)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, sq, nh), -jnp.inf, jnp.float32),
+        jnp.zeros((b, sq, nh), jnp.float32),
+        jnp.zeros((b, sq, nh, rank), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
+    lat_out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, Sq, H, rank)
+    out = jnp.einsum("bqhr,rhd->bqhd", lat_out, w_v_b)  # (B, Sq, H, v_dim)
+    return out.reshape(b, sq, nh * cfg.v_head_dim).astype(dtype)
+
+
+def mla_forward(cfg: ModelConfig, params, x, positions):
+    b, s, _ = x.shape
+    q_nope, q_rope = _queries(cfg, params, x, positions)
+    c_kv, k_rope = _latent_kv(cfg, params, x, positions)
+    out = _attend(cfg, params, q_nope, q_rope, c_kv, k_rope, kv_valid_len=s)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(cfg: ModelConfig, params, x, positions, cache):
+    b, s, _ = x.shape
+    q_nope, q_rope = _queries(cfg, params, x, positions)
+    c_kv, k_rope = _latent_kv(cfg, params, x, positions)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, 0, 1),
+    }
+    out = _attend(cfg, params, q_nope, q_rope, c_kv, k_rope, kv_valid_len=s)
+    return out @ params["wo"].astype(x.dtype), cache
+
+
+def mla_extend(cfg: ModelConfig, params, x, cache, pos):
+    """Extend the latent cache by S tokens at position ``pos`` (S=1: decode;
+    S=chunk: chunked prefill) and attend causally against the cache."""
+    b, s, _ = x.shape
+    positions = pos + jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    q_nope, q_rope = _queries(cfg, params, x, positions)
+    c_kv, k_rope = _latent_kv(cfg, params, x, positions)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, pos, 0)),
+    }
+    out = _attend(
+        cfg, params, q_nope, q_rope, cache["c_kv"], cache["k_rope"],
+        kv_valid_len=pos + s,
+    )
+    return out @ params["wo"].astype(x.dtype), cache
+
+
+def mla_decode(cfg: ModelConfig, params, x, cache, pos):
+    return mla_extend(cfg, params, x, cache, pos)

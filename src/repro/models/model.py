@@ -1,0 +1,342 @@
+"""Model assembly: periodic block pattern, scan-over-layers, serve paths.
+
+Layers are grouped into *periods* (the repeating pattern of mixer/FFN kinds
+— length 1 for homogeneous stacks, 8 for Jamba's 1-attention:7-mamba
+interleave).  Parameters for one period are initialised per-layer and
+stacked across periods, so the forward pass is a single ``lax.scan`` whose
+body unrolls one period: the compiled HLO contains ONE period body
+regardless of depth (94-layer qwen3-moe compiles as fast as 24-layer
+internvl2), and remat policy wraps the same unit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as ssm_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    embedding_init,
+    embedding_lookup,
+    head_apply,
+    head_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _mixer_init(cfg: ModelConfig, layer_idx: int, key):
+    if cfg.layer_kind(layer_idx) == "ssm":
+        return ssm_mod.mamba_init(cfg, key)
+    if cfg.use_mla:
+        return mla_mod.mla_init(cfg, key)
+    return attn_mod.attn_init(cfg, key)
+
+
+def _ffn_init(cfg: ModelConfig, layer_idx: int, key):
+    if cfg.layer_has_moe(layer_idx):
+        return moe_mod.moe_init(cfg, key)
+    if cfg.d_ff == 0:  # pure-mamba blocks: the mixer IS the block
+        return {}
+    return mlp_init(key, cfg.d_model, cfg.d_ff)
+
+
+def _block_init(cfg: ModelConfig, layer_idx: int, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "mixer": _mixer_init(cfg, layer_idx, k1),
+        "norm2": rmsnorm_init(cfg.d_model),
+        "ffn": _ffn_init(cfg, layer_idx, k2),
+    }
+
+
+def model_init(cfg: ModelConfig, key) -> dict:
+    period = cfg.block_pattern_period
+    n_scan = (cfg.n_layers - cfg.first_k_dense) // period
+    assert cfg.first_k_dense + n_scan * period == cfg.n_layers, (
+        cfg.n_layers,
+        cfg.first_k_dense,
+        period,
+    )
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict = {
+        "embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "head": head_init(keys[1], cfg.d_model, cfg.vocab_size),
+    }
+    # prologue layers (e.g. deepseek-v2's first dense layer), unstacked
+    params["prologue"] = [
+        _block_init(cfg, i, keys[2 + i]) for i in range(cfg.first_k_dense)
+    ]
+    # scanned stack: one period of blocks, stacked across n_scan repeats
+    per_period = []
+    for p in range(n_scan):
+        blocks = {}
+        for j in range(period):
+            layer_idx = cfg.first_k_dense + p * period + j
+            blocks[f"b{j}"] = _block_init(
+                cfg, layer_idx, keys[2 + cfg.first_k_dense + p * period + j]
+            )
+        per_period.append(blocks)
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / encoding)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(cfg: ModelConfig, layer_idx: int, params, x, positions, aux):
+    kind = cfg.layer_kind(layer_idx)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind == "ssm":
+        h = ssm_mod.mamba_forward(cfg, params["mixer"], h)
+    elif cfg.use_mla:
+        h = mla_mod.mla_forward(cfg, params["mixer"], h, positions)
+    else:
+        h = attn_mod.attn_forward(cfg, params["mixer"], h, positions)
+    x = x + h
+    if cfg.layer_has_moe(layer_idx):
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h, metrics = moe_mod.moe_apply(cfg, params["ffn"], h)
+        aux = {k: aux.get(k, 0.0) + v for k, v in metrics.items()}
+        x = x + h
+    elif cfg.d_ff:
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h = mlp_apply(params["ffn"], h)
+        x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def model_forward(
+    cfg: ModelConfig,
+    params,
+    tokens: Optional[jnp.ndarray] = None,  # (B, S_text) int32
+    embeds: Optional[jnp.ndarray] = None,  # (B, S_front, d) modality stub
+    remat: str = "none",
+):
+    """Returns logits (B, S, vocab) and aux metrics (MoE losses)."""
+    dtype = jnp.dtype(cfg.dtype)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(dtype))
+    if tokens is not None:
+        parts.append(embedding_lookup(params["embed"], tokens, dtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    aux = {}
+    for i, blk in enumerate(params["prologue"]):
+        x, aux = _block_apply(cfg, i, blk, x, positions, aux)
+
+    period = cfg.block_pattern_period
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for j in range(period):
+            layer_idx = cfg.first_k_dense + j  # kind pattern is periodic
+            x, aux = _block_apply(
+                cfg, layer_idx, period_params[f"b{j}"], x, positions, aux
+            )
+        return (x, aux), None
+
+    # seed aux keys so the scan carry structure is static
+    if cfg.moe_experts and any(
+        cfg.layer_has_moe(i) for i in range(cfg.first_k_dense, cfg.n_layers)
+    ):
+        for k in ("aux_loss", "z_loss", "dropped_frac"):
+            aux.setdefault(k, jnp.asarray(0.0, jnp.float32))
+
+    body = _remat_wrap(period_body, remat)
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_apply(params["head"], x)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_init(cfg: ModelConfig, layer_idx: int, batch: int, max_len: int, dtype):
+    if cfg.layer_kind(layer_idx) == "ssm":
+        return ssm_mod.mamba_cache_init(cfg, batch, dtype)
+    if cfg.use_mla:
+        return mla_mod.mla_cache_init(cfg, batch, max_len, dtype)
+    return attn_mod.attn_cache_init(cfg, batch, max_len, dtype)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked cache pytree matching the scanned parameter layout."""
+    dtype = jnp.dtype(cfg.dtype)
+    period = cfg.block_pattern_period
+    n_scan = (cfg.n_layers - cfg.first_k_dense) // period
+    pro = [
+        _layer_cache_init(cfg, i, batch, max_len, dtype)
+        for i in range(cfg.first_k_dense)
+    ]
+    per_period = []
+    for p in range(n_scan):
+        blocks = {}
+        for j in range(period):
+            li = cfg.first_k_dense + p * period + j
+            blocks[f"b{j}"] = _layer_cache_init(cfg, li, batch, max_len, dtype)
+        per_period.append(blocks)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    return {"prologue": pro, "layers": stacked}
+
+
+def _block_serve(cfg, layer_idx, params, x, positions, cache, pos, mode):
+    kind = cfg.layer_kind(layer_idx)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind == "ssm":
+        if mode == "prefill":
+            h, cache = ssm_mod.mamba_prefill(cfg, params["mixer"], h, positions, cache)
+        elif mode == "extend":
+            h, cache = ssm_mod.mamba_extend(cfg, params["mixer"], h, cache, pos)
+        else:
+            h, cache = ssm_mod.mamba_decode(cfg, params["mixer"], h, cache, pos)
+    elif cfg.use_mla:
+        if mode == "prefill":
+            h, cache = mla_mod.mla_prefill(cfg, params["mixer"], h, positions, cache)
+        else:  # extend covers decode (S=1) and chunked prefill (S=chunk)
+            h, cache = mla_mod.mla_extend(cfg, params["mixer"], h, cache, pos)
+    else:
+        if mode == "prefill":
+            h, cache = attn_mod.attn_prefill(cfg, params["mixer"], h, positions, cache)
+        else:
+            h, cache = attn_mod.attn_extend(cfg, params["mixer"], h, cache, pos)
+    x = x + h
+    if cfg.layer_has_moe(layer_idx):
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h, _ = moe_mod.moe_apply(cfg, params["ffn"], h)
+        x = x + h
+    elif cfg.d_ff:
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h = mlp_apply(params["ffn"], h)
+        x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    return x, cache
+
+
+def _serve_pass(cfg: ModelConfig, params, x, positions, caches, pos, mode):
+    period = cfg.block_pattern_period
+    for i, blk in enumerate(params["prologue"]):
+        x, caches["prologue"][i] = _block_serve(
+            cfg, i, blk, x, positions, caches["prologue"][i], pos, mode
+        )
+
+    def body(x, xs):
+        period_params, period_cache = xs
+        for j in range(period):
+            li = cfg.first_k_dense + j
+            x, period_cache[f"b{j}"] = _block_serve(
+                cfg, li, period_params[f"b{j}"], x, positions,
+                period_cache[f"b{j}"], pos, mode,
+            )
+        return x, period_cache
+
+    x, caches["layers"] = jax.lax.scan(body, x, (params["layers"], caches["layers"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return head_apply(params["head"], x), caches
+
+
+def model_prefill(cfg: ModelConfig, params, tokens, caches, embeds=None):
+    """Encode the prompt, fill caches; returns (last-position logits, caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(dtype))
+    if tokens is not None:
+        parts.append(embedding_lookup(params["embed"], tokens, dtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    logits, caches = _serve_pass(cfg, params, x, positions, caches, pos=None, mode="prefill")
+    return logits[:, -1], caches
+
+
+def model_prefill_chunked(
+    cfg: ModelConfig, params, tokens, caches, chunk: int, embeds=None
+):
+    """Chunked (Sarathi-style) prefill: process the prompt in fixed chunks.
+
+    Bounds the per-step working set — MoE dispatch buffers, attention score
+    blocks and activation residuals scale with the CHUNK, not the prompt:
+    the un-chunked 32k MoE prefill needed 322 GiB/chip of temps; chunked at
+    4k it is bounded by the train-shape working set.  SSM/conv states and
+    KV caches carry across chunks exactly (regression-tested vs the flat
+    forward).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(dtype))
+    if tokens is not None:
+        parts.append(embedding_lookup(params["embed"], tokens, dtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    b, s, d = x.shape
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    def body(caches, i):
+        xc = jax.lax.dynamic_slice(x, (0, i * chunk, 0), (b, chunk, d))
+        pos = i * chunk
+        positions = pos + jnp.broadcast_to(jnp.arange(chunk), (b, chunk)).astype(
+            jnp.int32
+        )
+        logits, caches = _serve_pass(
+            cfg, params, xc, positions, caches, pos=pos, mode="extend"
+        )
+        return caches, logits[:, -1]
+
+    caches, last_logits = jax.lax.scan(body, caches, jnp.arange(n_chunks))
+    return last_logits[-1], caches
+
+
+def model_decode(cfg: ModelConfig, params, token, caches, pos):
+    """One decode step. token: (B,) int32; pos: () int32 absolute position."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embedding_lookup(params["embed"], token[:, None], dtype)
+    x = shard(x, "batch", "seq", "embed")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(pos, (b, s)).astype(jnp.int32)
+    logits, caches = _serve_pass(cfg, params, x, positions, caches, pos=pos, mode="decode")
+    return logits[:, -1], caches

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN with sort-based, capacity-bounded dispatch.
+
+Dispatch is the load-balancing problem the paper's redistribution policy
+solves for quadrature regions: token load per expert is data-dependent and
+skewed, so the dispatcher bounds per-expert work with a static capacity
+(donor/receiver rebalancing happens implicitly through the router's aux
+loss; overflow tokens fall back to the residual stream).  The sort-based
+formulation keeps every shape static for XLA:
+
+  1. route: top-k expert ids + renormalised probs per token,
+  2. stable-sort the (T*k) assignments by expert id,
+  3. position-within-expert via the sorted prefix; drop beyond capacity,
+  4. gather tokens into (E, capacity, d) buffers — sharded over the 'model'
+     mesh axis, so under GSPMD this step lowers to the expert-parallel
+     all-to-all — run the expert SwiGLU as batched einsums, scatter back.
+
+Shared experts (DeepSeek-V2) are dense SwiGLUs applied to every token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal_init
+
+
+def moe_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    fd = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.moe_experts
+    keys = jax.random.split(key, 5)
+    params = {
+        "router": truncated_normal_init(keys[0], (d, e), 1.0),
+        "w_gate": truncated_normal_init(keys[1], (e, d, fd), 1.0),
+        "w_up": truncated_normal_init(keys[2], (e, d, fd), 1.0),
+        "w_down": truncated_normal_init(keys[3], (e, fd, d), 1.0),
+    }
+    if cfg.moe_shared_experts:
+        se = cfg.moe_shared_experts
+        ks = jax.random.split(keys[4], 3)
+        params["shared"] = {
+            "w_gate": truncated_normal_init(ks[0], (d, se * fd), 1.0),
+            "w_up": truncated_normal_init(ks[1], (d, se * fd), 1.0),
+            "w_down": truncated_normal_init(ks[2], (se * fd, d), 1.0),
+        }
+    return params
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.moe_top_k / cfg.moe_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(cfg: ModelConfig, params, x):
+    """x: (B, S, d) -> (out (B, S, d), aux_metrics dict)."""
+    b, s, d = x.shape
+    dtype = x.dtype
+    t = b * s
+    k = cfg.moe_top_k
+    e = cfg.moe_experts
+    cap = _capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    # --- routing -------------------------------------------------------------
+    logits = (xt.astype(jnp.float32)) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style) + router z-loss
+    density = jnp.mean(
+        jax.nn.one_hot(top_i, e, dtype=jnp.float32).sum(1), axis=0
+    )  # fraction of tokens per expert (x k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(density / k * mean_prob)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # --- sort-based dispatch ---------------------------------------------------
+    flat_e = top_i.reshape(-1)  # (T*k,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=e)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k) - starts[sorted_e]  # rank within expert
+    keep = pos < cap
+    token_of = sort_idx // k  # source token of each sorted slot
+
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)  # OOB -> dropped
+    buf = jnp.zeros((e * cap, d), dtype)
+    buf = buf.at[dest].set(xt[token_of], mode="drop")
+    buf = buf.reshape(e, cap, d)
+    # the dispatch buffers live (experts -> EP axis) x (capacity -> DP axes);
+    # the scatter above is therefore the expert-parallel all-to-all
+    buf = shard(buf, "experts", "expert_cap", None)
+
+    # --- expert computation (batched einsum over the expert axis) -------------
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dtype))
+    act = jax.nn.silu(gate) * up
+    act = shard(act, "experts", "expert_cap", None)
+    out_buf = jnp.einsum("ecf,efd->ecd", act, params["w_down"].astype(dtype))
+    out_buf = shard(out_buf, "experts", "expert_cap", None)
+
+    # --- combine ---------------------------------------------------------------
+    gathered = out_buf.reshape(e * cap, d)[jnp.minimum(dest, e * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weight = top_p.reshape(-1)[sort_idx].astype(dtype)
+    out = jnp.zeros((t, d), dtype).at[token_of].add(gathered * weight[:, None])
+
+    if cfg.moe_shared_experts:
+        sp = params["shared"]
+        g = xt @ sp["w_gate"].astype(dtype)
+        u = xt @ sp["w_up"].astype(dtype)
+        out = out + (jax.nn.silu(g) * u) @ sp["w_down"].astype(dtype)
+
+    dropped = (jnp.sum(~keep) / (t * k)).astype(jnp.float32)
+    metrics = {"aux_loss": aux_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return out.reshape(b, s, d), metrics
+
+
+def moe_ref_dense(cfg: ModelConfig, params, x):
+    """Oracle: run EVERY expert densely and mix by (unclipped) router probs.
+
+    Equal to `moe_apply` whenever no token is dropped (capacity unhit);
+    used by the property tests.
+    """
+    b, s, d = x.shape
+    dtype = x.dtype
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    weights = jnp.zeros_like(probs)
+    weights = jax.vmap(lambda w, i, p: w.at[i].set(p))(weights, top_i, top_p)
+
+    gate = jnp.einsum("td,edf->etf", xt, params["w_gate"].astype(dtype))
+    up = jnp.einsum("td,edf->etf", xt, params["w_up"].astype(dtype))
+    act = jax.nn.silu(gate) * up
+    per_expert = jnp.einsum("etf,efd->etd", act, params["w_down"].astype(dtype))
+    out = jnp.einsum("etd,te->td", per_expert, weights.astype(dtype))
+    if cfg.moe_shared_experts:
+        sp = params["shared"]
+        g = xt @ sp["w_gate"].astype(dtype)
+        u = xt @ sp["w_up"].astype(dtype)
+        out = out + (jax.nn.silu(g) * u) @ sp["w_down"].astype(dtype)
+    return out.reshape(b, s, d)

@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import cache_init, model_decode, model_prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
+    """Returns (prefill_fn, decode_fn), both jittable."""
+
+    def prefill(params, tokens, caches, embeds=None):
+        return model_prefill(cfg, params, tokens, caches, embeds=embeds)
+
+    def decode(params, token, caches, pos, key):
+        logits, caches = model_decode(cfg, params, token, caches, pos)
+        if scfg.temperature > 0.0:
+            nxt = jax.random.categorical(key, logits / scfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), caches
+
+    return jax.jit(prefill), jax.jit(decode)
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompt: jnp.ndarray,  # (B, S_prompt) int32
+    n_tokens: int,
+    scfg: Optional[ServeConfig] = None,
+    embeds: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Greedy/temperature generation; returns (B, n_tokens) int32."""
+    scfg = scfg or ServeConfig()
+    b, s_prompt = prompt.shape
+    s_front = embeds.shape[1] if embeds is not None else 0
+    max_len = s_front + s_prompt + n_tokens
+    caches = cache_init(cfg, b, max_len)
+    prefill, decode = make_serve_fns(cfg, scfg)
+
+    logits, caches = prefill(params, prompt, caches, embeds=embeds)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.PRNGKey(scfg.seed)
+
+    out = [token]
+    pos = s_front + s_prompt
+    for i in range(n_tokens - 1):
+        key, sub = jax.random.split(key)
+        token, caches = decode(params, token, caches, jnp.asarray(pos), sub)
+        out.append(token)
+        pos += 1
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,137 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (self-contained).
+
+Distributed-optimization extras:
+- **ZeRO-1**: optimizer moments constrained to shard over the DP axes
+  (logical axis "zero1") on the first divisible dimension — GSPMD then emits
+  reduce-scatter/all-gather pairs around the update instead of a full
+  all-reduce + replicated update.
+- **bf16 gradient compression with error feedback**: gradients are rounded
+  to bf16 before the update and the quantisation residual is carried to the
+  next step, emulating a compressed DP all-reduce while keeping convergence
+  (the residual never leaves the device that produced it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    zero1: bool = False
+    grad_compression: str = "none"  # none | bf16_ef
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac)
+    )
+    return cfg.lr * warm * cos
+
+
+def _zero1_constrain(leaf):
+    """Shard the first divisible dim of an optimizer moment over DP axes."""
+    ctx = current_ctx()
+    if ctx is None or leaf.ndim == 0:
+        return leaf
+    size = ctx.axis_size(ctx.rules.get("zero1"))
+    if size <= 1:
+        return leaf
+    for i, dim in enumerate(leaf.shape):
+        if dim % size == 0 and dim >= size:
+            names = [None] * leaf.ndim
+            names[i] = "zero1"
+            from repro.distributed.sharding import shard
+
+            return shard(leaf, *names)
+    return leaf
+
+
+def init_opt_state(cfg: OptimizerConfig, params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    state = {
+        "mu": zeros,
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.grad_compression == "bf16_ef":
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    if cfg.zero1:
+        state["mu"] = jax.tree.map(_zero1_constrain, state["mu"])
+        state["nu"] = jax.tree.map(_zero1_constrain, state["nu"])
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+
+    if cfg.grad_compression == "bf16_ef":
+        # add residual, round to bf16, keep the new residual
+        with_ef = jax.tree.map(lambda g, e: g + e, grads, state["ef"])
+        compressed = jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), with_ef
+        )
+        new_ef = jax.tree.map(lambda g, c: g - c, with_ef, compressed)
+        grads = compressed
+    else:
+        new_ef = None
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1 - cfg.b1**count.astype(jnp.float32)
+    b2c = 1 - cfg.b2**count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        if cfg.zero1:
+            m = _zero1_constrain(m)
+            v = _zero1_constrain(v)
+        return p - lr * step, m, v
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

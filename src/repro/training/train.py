@@ -1,0 +1,138 @@
+"""Loss + train_step for every architecture family (shared code path)."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import model_forward
+from repro.training.optimizer import OptimizerConfig, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "none"  # none | full | dots
+    microbatches: int = 1  # gradient accumulation steps
+    z_loss_coef: float = 1e-3
+    # Cast >=2-D fp32 params to this dtype BEFORE they are consumed: under
+    # FSDP sharding the cast happens on the local shard, so the per-layer
+    # weight all-gather moves bf16 instead of fp32 — half the collective
+    # bytes and half the transient gathered-weight memory.  The fp32 master
+    # copy stays sharded; gradients exit the cast boundary in fp32.
+    param_gather_dtype: str = "bfloat16"
+    opt: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+
+
+def lm_loss(cfg: ModelConfig, params, batch, remat: str = "none"):
+    """Cross-entropy next-token (or per-frame) loss.
+
+    batch keys: "tokens" (B, St) and/or "embeds" (B, Sf, d); "labels"
+    (B, S_out) aligned with the model's output positions; optional
+    "loss_mask" (B, S_out).
+    """
+    logits, aux = model_forward(
+        cfg,
+        params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        remat=remat,
+    )
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {"ce_loss": loss}
+    total = loss
+    if "aux_loss" in aux:
+        total = total + cfg.router_aux_coef * aux["aux_loss"]
+        metrics["router_aux"] = aux["aux_loss"]
+        metrics["dropped_frac"] = aux.get("dropped_frac", 0.0)
+        z = aux.get("z_loss", 0.0)
+        total = total + 1e-3 * z
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, param_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation: the batch's leading axis is split into
+    ``tcfg.microbatches`` chunks folded through a lax.scan — peak activation
+    memory scales with the microbatch, collectives with the full step.
+
+    ``param_shardings`` (optional pytree of NamedShardings): accumulated
+    gradients are constrained to the parameter layout BEFORE the optimizer —
+    without the constraint GSPMD lowers the data-parallel gradient reduction
+    as a full-tensor all-reduce (114 GiB/chip/step on qwen3-moe train);
+    with it, a reduce-scatter feeding the sharded update (§Perf hillclimb A2).
+    """
+
+    gather_dtype = jnp.dtype(tcfg.param_gather_dtype)
+
+    def cast_for_compute(params):
+        if gather_dtype == jnp.float32:
+            return params
+        return jax.tree.map(
+            lambda x: x.astype(gather_dtype)
+            if (x.ndim >= 2 and x.dtype == jnp.float32)
+            else x,
+            params,
+        )
+
+    def grads_of(params, batch):
+        # Differentiate wrt the ALREADY-CAST (bf16) tree: the cast is linear,
+        # so accumulating the bf16-cotangent grads in fp32 outside equals
+        # differentiating through the cast — but the cast (and the FSDP
+        # all-gather it feeds) is now loop-invariant wrt the microbatch scan
+        # and XLA hoists the gather to once per STEP instead of once per
+        # microbatch (§Perf hillclimb A).
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch, tcfg.remat), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        params_c = cast_for_compute(params)
+        if tcfg.microbatches == 1:
+            _, metrics, grads = grads_of(params_c, batch)
+        else:
+            m = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                assert b % m == 0, (b, m)
+                return x.reshape(m, b // m, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(jnp.zeros_like, params)
+
+            def body(acc, mb):
+                _, metrics, grads = grads_of(params_c, mb)
+                return jax.tree.map(jnp.add, acc, grads), metrics
+
+            grads, metrics = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+
+        if param_shardings is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads,
+                param_shardings,
+            )
+        params, opt_state, opt_metrics = apply_updates(
+            tcfg.opt, params, grads, opt_state
+        )
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

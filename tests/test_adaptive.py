@@ -1,0 +1,95 @@
+"""End-to-end single-device adaptive integration against analytic values."""
+
+import numpy as np
+import pytest
+
+from repro.core import integrands
+from repro.core.adaptive import integrate, integrate_device
+from repro.core.config import QuadratureConfig
+from repro.core.region_store import check_invariants, init_state, uniform_partition
+
+CASES = [
+    # (integrand, d, rel_tol, capacity)
+    ("f1", 3, 1e-7, 1 << 15),
+    ("f1", 5, 1e-6, 1 << 17),  # needs a large store: oscillatory, d=5
+    ("f2", 3, 1e-6, 1 << 15),
+    ("f3", 4, 1e-7, 1 << 15),
+    ("f4", 3, 1e-7, 1 << 15),
+    ("f4", 5, 1e-5, 1 << 15),
+    ("f5", 3, 1e-5, 1 << 15),
+    ("f6", 3, 1e-4, 1 << 15),
+    ("f7", 4, 1e-7, 1 << 15),
+]
+
+
+@pytest.mark.parametrize("name,d,rel_tol,capacity", CASES)
+def test_converges_to_exact(name, d, rel_tol, capacity):
+    cfg = QuadratureConfig(
+        d=d, integrand=name, rel_tol=rel_tol, capacity=capacity, max_iters=400
+    )
+    res = integrate(cfg)
+    exact = integrands.get(name).exact(d)
+    achieved = abs(res.integral - exact) / abs(exact)
+    assert res.status == "converged", res.summary()
+    # the requested tolerance must actually be met (paper Fig. 2b claim)
+    assert achieved <= 5 * rel_tol, (res.summary(), achieved, exact)
+
+
+def test_device_driver_matches_host_driver():
+    cfg = QuadratureConfig(d=4, integrand="f4", rel_tol=1e-6, capacity=1 << 13)
+    host = integrate(cfg)
+    dev = integrate_device(cfg)
+    assert dev.status == "converged"
+    assert dev.integral == pytest.approx(host.integral, rel=1e-9)
+
+
+def test_aggressive_mode_faster_on_peaked():
+    # PAGANI-like pruning should use no more evaluations on the product peak.
+    base = dict(d=3, integrand="f2", rel_tol=1e-6, capacity=1 << 14)
+    robust = integrate(QuadratureConfig(classifier="robust", **base))
+    aggressive = integrate(QuadratureConfig(classifier="aggressive", **base))
+    assert aggressive.status == "converged"
+    assert aggressive.n_evals <= robust.n_evals * 1.05
+
+
+def test_capacity_feasibility_flag():
+    # Tiny store at tight tolerance must hit capacity pressure (Fig. 3a).
+    cfg = QuadratureConfig(
+        d=5, integrand="f2", rel_tol=1e-9, capacity=256, n_init=8, max_iters=60
+    )
+    res = integrate(cfg)
+    assert res.overflowed or res.status == "converged"
+
+
+def test_uniform_partition_tiles_domain():
+    lo, hi = np.zeros(3), np.ones(3)
+    centers, halfw = uniform_partition(lo, hi, 16)
+    assert centers.shape == (16, 3)
+    vol = np.prod(2 * halfw, axis=1).sum()
+    assert vol == pytest.approx(1.0, rel=1e-12)
+    # boxes must be disjoint: pairwise L-inf separation >= sum of halfwidths
+    for i in range(16):
+        for j in range(i + 1, 16):
+            gap = np.abs(centers[i] - centers[j]) - (halfw[i] + halfw[j])
+            assert np.max(gap) >= -1e-12
+
+
+def test_state_invariants_after_run():
+    cfg = QuadratureConfig(d=3, integrand="f4", rel_tol=1e-5, capacity=1 << 12)
+    # drive manually to keep the final state
+    from repro.core.adaptive import make_advance_step, make_eval_step
+    from repro.core.rules import make_rule
+    import jax
+
+    rule = make_rule(cfg)
+    state = init_state(
+        cfg.capacity, np.zeros(3), np.ones(3), cfg.resolved_n_init(), np.float64
+    )
+    ev = jax.jit(make_eval_step(cfg, rule))
+    adv = jax.jit(make_advance_step(cfg, 1.0, np.ones(3)))
+    for _ in range(8):
+        state = ev(state)
+        state = adv(state)
+    check_invariants(state, np.zeros(3), np.ones(3))
+    # total volume conservation: active + (finalised is not tracked by volume,
+    # so only check actives are within the domain) — structural checks above.

@@ -1,0 +1,71 @@
+"""Distributed quadrature: multi-device correctness + load-balancing checks.
+
+Runs ``repro.core.dist_selftest`` in a subprocess so that
+``--xla_force_host_platform_device_count`` can take effect (the main pytest
+process has already initialised jax with a single device).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def selftest_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.dist_selftest", "8"],
+        capture_output=True,
+        text=True,
+        timeout=1800,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT_JSON:")]
+    assert line, proc.stdout[-4000:]
+    return json.loads(line[-1][len("RESULT_JSON:") :])
+
+
+def test_selftest_ran_on_8_devices(selftest_output):
+    assert selftest_output["n_devices"] == 8
+
+
+def test_distributed_converges_and_is_accurate(selftest_output):
+    for case in selftest_output["cases"]:
+        dist = case["dist"]
+        assert dist["status"] == "converged", case
+        ach = abs(dist["I"] - case["exact"]) / abs(case["exact"])
+        assert ach <= 10 * case["rel_tol"], (case["integrand"], ach)
+
+
+def test_distributed_matches_single_device(selftest_output):
+    for case in selftest_output["cases"]:
+        # both drivers meet the same tolerance -> they must agree to ~2*tol
+        rel = abs(case["dist"]["I"] - case["single"]["I"]) / abs(case["exact"])
+        assert rel <= 4 * case["rel_tol"], case
+
+
+def test_work_is_distributed(selftest_output):
+    # every device must perform a nontrivial share of the evaluations
+    for case in selftest_output["cases"]:
+        per_dev = case["dist"]["evals_per_device"]
+        total = sum(per_dev)
+        assert total > 0
+        assert min(per_dev) > 0.01 * total / len(per_dev), (
+            case["integrand"],
+            per_dev,
+        )
+
+
+def test_redistribution_improves_balance(selftest_output):
+    # averaged over the suite, round-robin redistribution must not worsen the
+    # per-iteration work imbalance vs the naive static decomposition
+    imb_on = [c["dist"]["mean_imbalance"] for c in selftest_output["cases"]]
+    imb_off = [c["dist_noredist"]["mean_imbalance"] for c in selftest_output["cases"]]
+    assert sum(imb_on) <= sum(imb_off) + 0.05, (imb_on, imb_off)

@@ -1,0 +1,123 @@
+"""Exactness and structural tests for the embedded Genz-Malik family.
+
+Exactness is checked on *random polynomials* of the target degree: by
+linearity, exactness on one random polynomial with dense monomial support
+verifies exactness on every monomial simultaneously (up to float roundoff).
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import genz_malik
+
+
+def _random_poly(d, max_degree, seed):
+    """Random polynomial with all monomials of total degree <= max_degree."""
+    powers = [
+        p
+        for p in itertools.product(range(max_degree + 1), repeat=d)
+        if sum(p) <= max_degree
+    ]
+    rng = np.random.default_rng(seed)
+    coef = rng.uniform(-1.0, 1.0, len(powers))
+    P = np.array(powers, np.float64)  # (n_terms, d)
+
+    def f(x):  # x: (d, N)
+        # (n_terms, N) = prod over axes of x^p
+        terms = jnp.prod(x[None, :, :] ** jnp.asarray(P)[:, :, None], axis=1)
+        return jnp.asarray(coef) @ terms
+
+    def exact_box(center, halfw):
+        val = 0.0
+        for cf, p in zip(coef, powers):
+            term = cf
+            for pi, c, h in zip(p, center, halfw):
+                a, b = c - h, c + h
+                term *= (b ** (pi + 1) - a ** (pi + 1)) / (pi + 1)
+            val += term
+        return val
+
+    return f, exact_box
+
+
+def _integrate_box(f, center, halfw):
+    c = jnp.asarray(center, jnp.float64)[None, :]
+    h = jnp.asarray(halfw, jnp.float64)[None, :]
+    i7, i5, i3, diffs = jax.jit(genz_malik.gm_eval_reference, static_argnums=0)(
+        f, c, h
+    )
+    return float(i7[0]), float(i5[0]), float(i3[0]), np.asarray(diffs[0])
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4, 5, 6])
+def test_degree7_exact(d):
+    f, exact_box = _random_poly(d, 7, seed=d)
+    center, halfw = [0.5] * d, [0.5] * d
+    i7, _, _, _ = _integrate_box(f, center, halfw)
+    assert i7 == pytest.approx(exact_box(center, halfw), rel=1e-11, abs=1e-12)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+def test_degree5_and_degree3_exact(d):
+    f5, exact5 = _random_poly(d, 5, seed=10 + d)
+    center, halfw = [0.3] * d, [0.4] * d
+    _, i5, _, _ = _integrate_box(f5, center, halfw)
+    assert i5 == pytest.approx(exact5(center, halfw), rel=1e-11, abs=1e-12)
+
+    f3, exact3 = _random_poly(d, 3, seed=20 + d)
+    _, _, i3, _ = _integrate_box(f3, center, halfw)
+    assert i3 == pytest.approx(exact3(center, halfw), rel=1e-11, abs=1e-12)
+
+
+def test_not_exact_beyond_degree():
+    # x^8 in 1-D must NOT be integrated exactly by the degree-7 rule.
+    def f(x):
+        return x[0] ** 8
+
+    i7, _, _, _ = _integrate_box(f, [0.0], [1.0])
+    assert abs(i7 - 2.0 / 9.0) > 1e-6
+
+
+@pytest.mark.parametrize("d", [2, 3, 5, 8])
+def test_n_nodes_formula(d):
+    assert genz_malik.n_nodes(d) == 1 + 4 * d + 2 * d * (d - 1) + 2**d
+
+
+def test_subdivision_consistency():
+    # Summed halves agree with the whole box at rule accuracy.
+    def f(x):
+        return jnp.sin(x[0]) * jnp.exp(-x[1]) + x[2] ** 3
+
+    whole, *_ = _integrate_box(f, [0.0, 0.0, 0.0], [1.0, 1.0, 1.0])
+    left, *_ = _integrate_box(f, [-0.5, 0.0, 0.0], [0.5, 1.0, 1.0])
+    right, *_ = _integrate_box(f, [0.5, 0.0, 0.0], [0.5, 1.0, 1.0])
+    assert whole == pytest.approx(left + right, rel=1e-4, abs=1e-6)
+
+
+def test_fourth_difference_picks_rough_axis():
+    def f(x):
+        return jnp.cos(20.0 * x[1]) + 0.01 * x[0]
+
+    _, _, _, diffs = _integrate_box(f, [0.5, 0.5, 0.5], [0.5, 0.5, 0.5])
+    assert int(np.argmax(diffs)) == 1
+
+
+def test_batch_consistency():
+    rng = np.random.default_rng(0)
+    d, b = 4, 17
+
+    def f(x):
+        return jnp.exp(-jnp.sum(x**2, axis=0))
+
+    centers = rng.uniform(0.2, 0.8, (b, d))
+    halfw = rng.uniform(0.05, 0.2, (b, d))
+    ev = jax.jit(genz_malik.gm_eval_reference, static_argnums=0)
+    i7b, i5b, i3b, diffb = ev(f, jnp.asarray(centers), jnp.asarray(halfw))
+    i7s, i5s, _, diffs = ev(f, jnp.asarray(centers[:1]), jnp.asarray(halfw[:1]))
+    np.testing.assert_allclose(i7b[0], i7s[0], rtol=1e-13)
+    np.testing.assert_allclose(i5b[0], i5s[0], rtol=1e-13)
+    np.testing.assert_allclose(diffb[0], diffs[0], rtol=1e-12, atol=1e-15)

@@ -1,0 +1,46 @@
+"""Analytic exact values + basic sanity of the paper's benchmark integrands."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import integrands
+
+
+@pytest.mark.parametrize("name", sorted(integrands.REGISTRY))
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_exact_matches_bruteforce_grid(name, d):
+    """Cross-check the analytic exact value with a dense midpoint grid.
+
+    The midpoint rule converges O(n^-2) for smooth f; we only need a loose
+    agreement to catch wrong formulas (sign errors, off-by-one in indices).
+    """
+    spec = integrands.get(name)
+    n = {1: 40001, 2: 801, 3: 151}[d]
+    axes = [np.linspace(0.5 / n, 1 - 0.5 / n, n)] * d
+    grid = np.stack([g.ravel() for g in np.meshgrid(*axes, indexing="ij")])
+    vals = np.asarray(spec.fn(jnp.asarray(grid)))
+    approx = vals.mean()  # midpoint rule on [0,1]^d
+    exact = spec.exact(d)
+    # discontinuous/peaked integrands converge slower on a uniform grid
+    rtol = {"f2": 5e-2, "f4": 5e-2, "f6": 5e-2}.get(name, 5e-3)
+    assert approx == pytest.approx(exact, rel=rtol), (name, d, approx, exact)
+
+
+def test_f6_cutoff_structure():
+    # d=2: any coordinate above its cutoff zeroes the integrand
+    f = integrands.get("f6").fn
+    x_in = jnp.asarray([[0.3], [0.4]])  # cutoffs: 0.4, 0.5
+    x_out = jnp.asarray([[0.45], [0.4]])
+    assert float(f(x_in)[0]) > 0.0
+    assert float(f(x_out)[0]) == 0.0
+
+
+def test_f7_exact_small_d():
+    # d=1: integral of x^22 = 1/23
+    assert integrands.get("f7").exact(1) == pytest.approx(1.0 / 23.0, rel=1e-12)
+
+
+def test_f1_exact_d1():
+    # d=1: integral of cos(x) over [0,1] = sin(1)
+    assert integrands.get("f1").exact(1) == pytest.approx(np.sin(1.0), rel=1e-12)

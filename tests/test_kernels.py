@@ -1,0 +1,91 @@
+"""Pallas GM kernel vs pure-jnp oracle: shape/dtype/block sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import integrands
+from repro.kernels import ops
+from repro.kernels.ref import genz_malik_eval_soa_ref
+
+
+def _random_regions(rng, b, d, dtype):
+    centers = rng.uniform(0.1, 0.9, (b, d)).astype(dtype)
+    halfw = rng.uniform(0.01, 0.1, (b, d)).astype(dtype)
+    return jnp.asarray(centers), jnp.asarray(halfw)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("b", [64, 256])
+def test_kernel_matches_ref_shapes(d, b):
+    rng = np.random.default_rng(d * 100 + b)
+    centers, halfw = _random_regions(rng, b, d, np.float64)
+    f = integrands.get("f4").fn
+
+    i7k, i5k, i3k, dk = ops.genz_malik_eval(f, centers, halfw, interpret=True)
+    i7r, i5r, i3r, dr = genz_malik_eval_soa_ref(f, centers.T, halfw.T)
+
+    np.testing.assert_allclose(i7k, i7r, rtol=1e-12, atol=1e-300)
+    np.testing.assert_allclose(i5k, i5r, rtol=1e-12, atol=1e-300)
+    np.testing.assert_allclose(i3k, i3r, rtol=1e-12, atol=1e-300)
+    # fourth differences are differences of near-equal tiny numbers; compare
+    # at a scale-relative absolute tolerance
+    np.testing.assert_allclose(
+        dk, dr.T, rtol=1e-8, atol=float(np.max(np.abs(dr))) * 1e-10
+    )
+
+
+@pytest.mark.parametrize("name", ["f1", "f2", "f3", "f5", "f6", "f7"])
+def test_kernel_matches_ref_integrands(name):
+    rng = np.random.default_rng(7)
+    d, b = 4, 128
+    centers, halfw = _random_regions(rng, b, d, np.float64)
+    f = integrands.get(name).fn
+    i7k, *_ = ops.genz_malik_eval(f, centers, halfw, interpret=True)
+    i7r, *_ = genz_malik_eval_soa_ref(f, centers.T, halfw.T)
+    np.testing.assert_allclose(i7k, i7r, rtol=1e-12, atol=1e-300)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 1e-3), (np.float64, 1e-12)])
+def test_kernel_dtypes(dtype, rtol):
+    rng = np.random.default_rng(3)
+    d, b = 3, 128
+    centers, halfw = _random_regions(rng, b, d, dtype)
+    f = integrands.get("f1").fn
+    i7k, *_ = ops.genz_malik_eval(f, centers, halfw, interpret=True)
+    assert i7k.dtype == dtype
+    # compare against the float64 oracle
+    i7r, *_ = genz_malik_eval_soa_ref(
+        f, centers.T.astype(np.float64), halfw.T.astype(np.float64)
+    )
+    np.testing.assert_allclose(i7k, i7r, rtol=rtol)
+
+
+@pytest.mark.parametrize("block", [32, 64, 128, 512])
+def test_kernel_block_sizes(block):
+    rng = np.random.default_rng(11)
+    d, b = 3, 192  # not a multiple of most blocks -> exercises padding
+    centers, halfw = _random_regions(rng, b, d, np.float64)
+    f = integrands.get("f3").fn
+    i7k, i5k, _, dk = ops.genz_malik_eval(
+        f, centers, halfw, block_regions=block, interpret=True
+    )
+    i7r, i5r, _, dr = genz_malik_eval_soa_ref(f, centers.T, halfw.T)
+    np.testing.assert_allclose(i7k, i7r, rtol=1e-12)
+    np.testing.assert_allclose(i5k, i5r, rtol=1e-12)
+    assert dk.shape == (b, d)
+
+
+def test_rule_with_kernel_integrates():
+    """End-to-end: adaptive driver with the kernel path enabled."""
+    from repro.core.adaptive import integrate
+    from repro.core.config import QuadratureConfig
+
+    cfg = QuadratureConfig(
+        d=3, integrand="f4", rel_tol=1e-6, capacity=1 << 12, use_kernel=True
+    )
+    res = integrate(cfg)
+    exact = integrands.get("f4").exact(3)
+    assert res.status == "converged"
+    assert abs(res.integral - exact) / abs(exact) <= 5e-6
