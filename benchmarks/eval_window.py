@@ -1,0 +1,91 @@
+"""Per-iteration rule-eval cost vs active count: full store vs active window.
+
+Quantifies the tentpole claim of the active-window refactor: with the legacy
+path every iteration pays for all ``capacity`` slots, so early/late
+iterations with few live regions burn orders of magnitude more FLOPs than
+needed; the windowed path evaluates only the smallest ladder rung covering
+the live population.
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def _timeit(fn, state, reps: int) -> float:
+    fn(state).est.block_until_ready()  # warmup / compile
+    t0 = time.time()
+    for _ in range(reps):
+        fn(state).est.block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def run(fast: bool = True):
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import region_store
+    from repro.core.adaptive import make_eval_step
+    from repro.core.config import QuadratureConfig
+    from repro.core.rules import make_rule
+
+    d = 5
+    capacity = 1 << 13 if fast else 1 << 14
+    cfg = QuadratureConfig(d=d, integrand="f4", capacity=capacity).validate()
+    rule = make_rule(cfg)
+    ladder = region_store.window_ladder(capacity, cfg.eval_window_min)
+    full = jax.jit(make_eval_step(cfg, rule))
+
+    rng = np.random.default_rng(0)
+    reps = 3 if fast else 10
+    actives = sorted({64, 256, 1024, capacity // 16, capacity // 4, capacity})
+    out = []
+    for n_active in actives:
+        centers = np.zeros((capacity, d))
+        halfw = np.zeros((capacity, d))
+        centers[:n_active] = rng.uniform(0.2, 0.8, (n_active, d))
+        halfw[:n_active] = rng.uniform(0.01, 0.1, (n_active, d))
+        mask = np.arange(capacity) < n_active
+        state = dataclasses.replace(
+            region_store.empty_state(capacity, d, jnp.float64),
+            centers=jnp.asarray(centers),
+            halfw=jnp.asarray(halfw),
+            active=jnp.asarray(mask),
+            fresh=jnp.asarray(mask),
+        )
+        window = region_store.select_window(ladder, n_active)
+        windowed = jax.jit(make_eval_step(cfg, rule, window=window))
+        t_full = _timeit(full, state, reps)
+        t_win = _timeit(windowed, state, reps)
+        out.append(
+            {
+                "d": d,
+                "capacity": capacity,
+                "n_active": n_active,
+                "window": window,
+                "full_us": t_full * 1e6,
+                "windowed_us": t_win * 1e6,
+                "speedup": t_full / t_win,
+            }
+        )
+    from benchmarks._common import save_results
+
+    save_results("eval_window", out)
+    return out
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"eval_window/d{r['d']}_C{r['capacity']}_n{r['n_active']}",
+            r["windowed_us"],
+            f"full_us={r['full_us']:.0f};window={r['window']};"
+            f"speedup={r['speedup']:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

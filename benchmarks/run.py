@@ -19,6 +19,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        eval_window,
         fig2a_runtime,
         fig2b_accuracy,
         fig3a_feasibility,
@@ -36,6 +37,7 @@ def main() -> None:
         "fig4a": fig4a_scaling,
         "fig4b": fig4b_idle,
         "kernel": kernel_bench,
+        "eval_window": eval_window,
     }
     if args.only:
         keep = set(args.only.split(","))

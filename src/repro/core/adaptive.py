@@ -11,12 +11,18 @@ Two drivers are provided:
   host synchronisation at all (TPU-native improvement; the convergence check
   runs on device, which is what the paper's global sync point becomes when
   the whole solver is one XLA program).
+
+Both drivers evaluate the rule over an *active window* — the leading slice of
+the compacted store sized from a geometric ladder (see
+``region_store.window_ladder``) — so per-iteration cost scales with the live
+region population rather than store capacity.  The host driver picks the
+window from the active count it already syncs (one cached jit per rung); the
+device driver selects the statically-shaped branch with ``lax.switch``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -49,23 +55,72 @@ class AdaptiveResult:
         )
 
 
-def make_eval_step(cfg: QuadratureConfig, rule) -> Callable[[RegionState], RegionState]:
-    """Evaluate fresh regions, update per-region estimates + eval counter."""
+def make_eval_step(
+    cfg: QuadratureConfig, rule, window: Optional[int] = None
+) -> Callable[[RegionState], RegionState]:
+    """Evaluate fresh regions, update per-region estimates + eval counter.
+
+    ``window`` restricts the rule evaluation to the leading ``window`` rows
+    of the store.  By the active-window invariant (region_store docstring)
+    every active — hence every fresh — region lives in ``[0, n_active)``, so
+    any ``window >= n_active`` produces bit-identical results to the legacy
+    full-capacity evaluation while doing ``window / capacity`` of the work.
+    ``None`` evaluates the full store.
+    """
 
     def eval_step(state: RegionState) -> RegionState:
-        need = state.active & state.fresh
-        est, err, axis = rule.eval_batch(state.centers, state.halfw)
+        w = state.capacity if window is None else min(window, state.capacity)
+        need = state.active[:w] & state.fresh[:w]
+        est, err, axis = rule.eval_batch(state.centers[:w], state.halfw[:w])
         return dataclasses.replace(
             state,
-            est=jnp.where(need, est, state.est),
-            err=jnp.where(need, err, state.err),
-            axis=jnp.where(need, axis, state.axis),
+            est=state.est.at[:w].set(jnp.where(need, est, state.est[:w])),
+            err=state.err.at[:w].set(jnp.where(need, err, state.err[:w])),
+            axis=state.axis.at[:w].set(jnp.where(need, axis, state.axis[:w])),
             fresh=jnp.zeros_like(state.fresh),
             n_evals=state.n_evals
             + jnp.sum(need).astype(state.n_evals.dtype) * rule.n_evals_per_region,
         )
 
     return eval_step
+
+
+def make_switched_eval_step(
+    cfg: QuadratureConfig, rule
+) -> Callable[[RegionState], RegionState]:
+    """Device-resident windowed evaluation: ``lax.switch`` over the ladder.
+
+    For drivers that never sync the active count to the host
+    (:func:`integrate_device`, the distributed per-device step) the window is
+    chosen on device: the active count indexes the smallest ladder rung that
+    covers the population and dispatches the matching statically-shaped
+    branch.
+    """
+    if not cfg.eval_window:
+        return make_eval_step(cfg, rule)
+    ladder = region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
+    branches = [make_eval_step(cfg, rule, window=w) for w in ladder]
+    rungs = jnp.asarray(ladder, jnp.int32)
+
+    def eval_step(state: RegionState) -> RegionState:
+        n = jnp.sum(state.active).astype(jnp.int32)
+        ix = jnp.minimum(jnp.searchsorted(rungs, n), len(ladder) - 1)
+        return jax.lax.switch(ix, branches, state)
+
+    return eval_step
+
+
+def donate_argnums(platform: Optional[str] = None) -> tuple[int, ...]:
+    """Donate the state buffers of per-iteration dispatches.
+
+    The ``(C, d)`` SoA arrays are the dominant allocation; donating them lets
+    XLA update the population in place instead of copying it every step.
+    Skipped on CPU, where donation is unimplemented and only triggers a
+    warning per compiled executable.  ``platform`` is the platform of the
+    devices that will actually run the computation; default backend otherwise.
+    """
+    platform = platform or jax.default_backend()
+    return () if platform == "cpu" else (0,)
 
 
 def make_advance_step(
@@ -125,8 +180,32 @@ def integrate(
     """Host-driven adaptive integration (one scalar sync per iteration)."""
     cfg, lo, hi, total_volume, rule, state = _setup(cfg, integrand)
 
-    eval_step = jax.jit(make_eval_step(cfg, rule))
-    advance = jax.jit(make_advance_step(cfg, total_volume, hi - lo))
+    donate = donate_argnums()
+    ladder = (
+        region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
+        if cfg.eval_window
+        else (cfg.capacity,)
+    )
+    # One jitted eval variant per ladder rung, compiled on first use.  The
+    # host loop already syncs the active count each iteration, so the next
+    # window is known before dispatch and the switch costs nothing on device.
+    eval_cache: dict[int, Callable] = {}
+
+    def eval_step_for(n_active: int) -> Callable[[RegionState], RegionState]:
+        w = region_store.select_window(ladder, n_active)
+        fn = eval_cache.get(w)
+        if fn is None:
+            fn = jax.jit(make_eval_step(cfg, rule, window=w), donate_argnums=donate)
+            eval_cache[w] = fn
+        return fn
+
+    advance_core = make_advance_step(cfg, total_volume, hi - lo)
+
+    def advance_and_count(state):
+        state = advance_core(state)
+        return state, state.n_active()
+
+    advance = jax.jit(advance_and_count, donate_argnums=donate)
 
     @jax.jit
     def metrics(state):
@@ -135,9 +214,9 @@ def integrate(
 
     converged = False
     integral = error = 0.0
-    n_active = cfg.resolved_n_init()
+    n_active = n_next = cfg.resolved_n_init()
     for _ in range(cfg.max_iters):
-        state = eval_step(state)
+        state = eval_step_for(n_next)(state)
         integral, error, n_active = (float(x) for x in metrics(state))
         if callback is not None:
             callback(int(state.it), integral, error, int(n_active))
@@ -147,7 +226,8 @@ def integrate(
             break
         if n_active == 0:
             break
-        state = advance(state)
+        state, n_dev = advance(state)
+        n_next = int(n_dev)
 
     return AdaptiveResult(
         integral=integral,
@@ -167,7 +247,7 @@ def integrate_device(
 ) -> AdaptiveResult:
     """Fully device-resident driver: lax.while_loop, zero host syncs."""
     cfg, lo, hi, total_volume, rule, state = _setup(cfg, integrand)
-    eval_step = make_eval_step(cfg, rule)
+    eval_step = make_switched_eval_step(cfg, rule)
     advance = make_advance_step(cfg, total_volume, hi - lo)
 
     def cond(state: RegionState):

@@ -29,12 +29,25 @@ class QuadratureConfig:
     classifier: str = "robust"  # "robust" (ours) | "aggressive" (PAGANI-like)
     rule: str = "genz_malik"  # "genz_malik" | "gauss_kronrod"
     use_kernel: bool = False  # Pallas GM kernel (interpret on CPU) vs pure jnp
+    interpret: bool = True  # Pallas interpret mode (CPU validation); False on TPU
+    block_regions: int = 0  # kernel lanes per block; 0 = kernels.ops default
     dtype: str = "float64"
+    # --- active-window evaluation --------------------------------------------
+    # The compaction invariant (see region_store / split docstrings) keeps all
+    # active regions contiguous at the front of the store, so the rule only
+    # needs to be evaluated on the leading window of the SoA arrays.  Window
+    # sizes are drawn from a geometric ladder of powers of two so the number
+    # of distinct compiled shapes stays at log2(capacity / eval_window_min).
+    eval_window: bool = True  # evaluate only the leading active window
+    eval_window_min: int = 256  # smallest ladder bucket (power of two)
     # --- distributed ---------------------------------------------------------
     message_cap: int = 512  # max regions per transfer (paper default)
     init_regions_per_device: int = 8  # paper: 8 subdomains per rank at startup
     redistribution: str = "ring"  # any value != "off" enables the static
     #   ring-schedule round-robin policy ("xor" accepted as a legacy alias)
+    sync_every: int = 4  # iterations fused per dispatch in integrate_distributed;
+    #   convergence is checked on device each iteration, the host only syncs
+    #   (and reads back the per-iteration metrics) every sync_every steps
     # --- numerical guards (Gander-Gautschi style) -----------------------------
     min_width_frac: float = 1e-10  # halfwidth floor relative to domain width
     noise_mult: float = 50.0  # round-off noise floor multiplier
@@ -74,6 +87,16 @@ class QuadratureConfig:
             raise ValueError(f"unknown classifier {self.classifier!r}")
         if self.rule not in ("genz_malik", "gauss_kronrod"):
             raise ValueError(f"unknown rule {self.rule!r}")
+        if self.eval_window_min < 1 or (
+            self.eval_window_min & (self.eval_window_min - 1)
+        ):
+            raise ValueError("eval_window_min must be a positive power of two")
+        if self.block_regions < 0 or (
+            self.block_regions & (self.block_regions - 1)
+        ):
+            raise ValueError("block_regions must be a power of two (or 0 = default)")
+        if self.sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
         if len(self.domain_lo) not in (0, self.d):
             raise ValueError("domain_lo must be empty or length d")
         if len(self.domain_hi) not in (0, self.d):

@@ -6,7 +6,9 @@ distributed extension:
 
   1. *metadata exchange* — `psum` of (integral, error, active count) right
      after evaluation: the paper's compact per-iteration summary and its only
-     global synchronisation point.  Convergence is decided on these values.
+     global synchronisation point.  Convergence is decided on these values —
+     on device, so ``sync_every`` iterations can be fused into one dispatch
+     and the host only reads back (stacked) metrics at that cadence.
   2. *classification with global context* — the equal-share classifier uses
      the GLOBAL active count, so all devices finalise against the same
      threshold (a single-device run and a P-device run of the same problem
@@ -31,8 +33,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import region_store
-from repro.core.adaptive import AdaptiveResult, make_eval_step
-from repro.core.classify import classify
+from repro.core.adaptive import (
+    AdaptiveResult,
+    donate_argnums,
+    make_switched_eval_step,
+)
+from repro.core.classify import classify, error_budget
 from repro.core.config import QuadratureConfig
 from repro.core.redistribution import balance_stats, make_schedule, redistribute
 from repro.core.region_store import RegionState
@@ -40,6 +46,26 @@ from repro.core.rules import make_rule
 from repro.core.split import classify_split_compact
 
 AXIS = "dev"
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map with the replication checker disabled.
+
+    Loop carries built inside the body start device-invariant and become
+    device-varying after the first iteration; the static vma/rep checker
+    cannot express that, so it is disabled.  jax >= 0.5 exposes
+    ``jax.shard_map(check_vma=...)``; older releases only have
+    ``jax.experimental.shard_map.shard_map(check_rep=...)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 @dataclasses.dataclass
@@ -121,14 +147,22 @@ def make_dist_step(
     domain_width: np.ndarray,
     schedule,
 ):
-    eval_step = make_eval_step(cfg, rule)
+    """K-fused per-device step (K = ``cfg.sync_every``).
+
+    ``dist_step`` runs up to K full iterations inside one dispatch.  The
+    convergence check runs on device against the psum'd metadata (which is
+    identical on every rank, so all ranks take the same branch) and iterations
+    after convergence become pass-throughs; the host only syncs once per
+    dispatch, reading back the stacked per-iteration metrics plus an
+    ``executed`` mask — the paper's "overlap communication with computation"
+    applied to the host<->device channel.
+    """
+    eval_step = make_switched_eval_step(cfg, rule)
     limit = 3 * cfg.capacity // 4
     width = jnp.asarray(domain_width)
+    dtype = jnp.dtype(cfg.dtype)
 
-    def dist_step(state: RegionState):
-        # squeeze the leading per-device axis added by shard_map
-        state = jax.tree.map(lambda x: x[0], state)
-
+    def dist_core(state: RegionState):
         work_loc = jnp.sum(state.active & state.fresh)
         state = eval_step(state)
 
@@ -174,14 +208,53 @@ def make_dist_step(
         state = dataclasses.replace(state, it=state.it + 1)
 
         metrics = {
-            "integral": integral,
-            "error": error,
-            "n_active": n_global,
-            "work_imb": work_imb,
-            "max_rows": max_rows,
+            "integral": integral.astype(dtype),
+            "error": error.astype(dtype),
+            "n_active": n_global.astype(jnp.int32),
+            "work_imb": work_imb.astype(dtype),
+            "max_rows": max_rows.astype(jnp.int32),
         }
-        state = jax.tree.map(lambda x: x[None], state)
         return state, metrics
+
+    def _zero_metrics():
+        return {
+            "integral": jnp.zeros((), dtype),
+            "error": jnp.zeros((), dtype),
+            "n_active": jnp.zeros((), jnp.int32),
+            "work_imb": jnp.zeros((), dtype),
+            "max_rows": jnp.zeros((), jnp.int32),
+        }
+
+    def dist_step(state: RegionState):
+        # squeeze the leading per-device axis added by shard_map
+        state = jax.tree.map(lambda x: x[0], state)
+
+        def one(carry, _):
+            state, done = carry
+            executed = ~done
+
+            def run(s):
+                s2, m = dist_core(s)
+                # device-side convergence: the same decision the host made
+                # per-iteration, on the same psum'd (replicated) metadata
+                stop = (
+                    (m["error"] <= error_budget(cfg, m["integral"]))
+                    | (m["n_active"] == 0)
+                    | (s2.it >= cfg.max_iters)
+                )
+                return s2, stop, m
+
+            def skip(s):
+                return s, jnp.asarray(True), _zero_metrics()
+
+            state, done, m = jax.lax.cond(done, skip, run, state)
+            return (state, done), (m, executed)
+
+        (state, _), (ms, executed) = jax.lax.scan(
+            one, (state, jnp.asarray(False)), None, length=cfg.sync_every
+        )
+        state = jax.tree.map(lambda x: x[None], state)
+        return state, ms, executed
 
     return dist_step
 
@@ -214,16 +287,13 @@ def integrate_distributed(
         cfg, rule, n_devices, total_volume, hi - lo, schedule
     )
     step = jax.jit(
-        jax.shard_map(
+        _shard_map(
             dist_step,
             mesh=mesh,
             in_specs=P(AXIS),
-            out_specs=(P(AXIS), P()),
-            # loop carries built inside the body start device-invariant and
-            # become device-varying after the first iteration; the static vma
-            # checker cannot express that, so it is disabled here.
-            check_vma=False,
-        )
+            out_specs=(P(AXIS), P(), P()),
+        ),
+        donate_argnums=donate_argnums(mesh.devices.flat[0].platform),
     )
 
     history = []
@@ -231,21 +301,27 @@ def integrate_distributed(
     integral = error = 0.0
     n_active = 0
     it = 0
-    for it in range(cfg.max_iters):
-        state, metrics = step(state)
-        integral = float(metrics["integral"])
-        error = float(metrics["error"])
-        n_active = int(metrics["n_active"])
-        history.append(
-            (
-                it,
-                integral,
-                error,
-                n_active,
-                float(metrics["work_imb"]),
-                int(metrics["max_rows"]),
+    while it < cfg.max_iters:
+        state, ms, executed = step(state)
+        executed = np.asarray(executed)
+        ms = jax.device_get(ms)
+        for t in range(len(executed)):
+            if not executed[t]:
+                break
+            integral = float(ms["integral"][t])
+            error = float(ms["error"][t])
+            n_active = int(ms["n_active"][t])
+            history.append(
+                (
+                    it,
+                    integral,
+                    error,
+                    n_active,
+                    float(ms["work_imb"][t]),
+                    int(ms["max_rows"][t]),
+                )
             )
-        )
+            it += 1
         budget = max(cfg.abs_tol, abs(integral) * cfg.rel_tol)
         if error <= budget:
             converged = True
@@ -267,7 +343,7 @@ def integrate_distributed(
         integral=integral,
         error=error,
         status=status,
-        iterations=it + 1,
+        iterations=it,
         n_evals=float(np.sum(np.asarray(state.n_evals))),
         n_active=n_active,
         overflowed=overflowed,

@@ -16,6 +16,7 @@ import math
 from functools import lru_cache
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,16 +30,21 @@ class Integrand:
     smooth: bool = True
 
 
-def _axis_coeff(d: int, dtype, start: int = 1) -> jnp.ndarray:
-    return jnp.arange(start, start + d, dtype=dtype)[:, None]
+def _axis_coeff(x: jnp.ndarray, start: int = 1) -> jnp.ndarray:
+    """Per-axis coefficient ``start + axis`` broadcast over ``x``'s shape.
+
+    Generated with a 2-D iota rather than a closed-over ``jnp.arange`` so
+    that Pallas kernels which inline the integrand capture no constant
+    arrays (pallas_call rejects captured consts).
+    """
+    return jax.lax.broadcasted_iota(x.dtype, x.shape, 0) + float(start)
 
 
 # --- f1: oscillatory ---------------------------------------------------------
 
 
 def f1(x: jnp.ndarray) -> jnp.ndarray:
-    d = x.shape[0]
-    i = _axis_coeff(d, x.dtype)
+    i = _axis_coeff(x)
     return jnp.cos(jnp.sum(i * x, axis=0))
 
 
@@ -71,7 +77,7 @@ def f2_exact(d: int) -> float:
 
 def f3(x: jnp.ndarray) -> jnp.ndarray:
     d = x.shape[0]
-    i = _axis_coeff(d, x.dtype)
+    i = _axis_coeff(x)
     return (1.0 + jnp.sum(i * x, axis=0)) ** (-(d + 1.0))
 
 
@@ -119,8 +125,7 @@ def f5_exact(d: int) -> float:
 
 
 def f6(x: jnp.ndarray) -> jnp.ndarray:
-    d = x.shape[0]
-    i = _axis_coeff(d, x.dtype)  # 1-based axis index
+    i = _axis_coeff(x)  # 1-based axis index
     cut = (3.0 + i) / 10.0
     inside = jnp.all(x <= cut, axis=0)
     val = jnp.exp(jnp.sum((i + 4.0) * x, axis=0))

@@ -42,7 +42,6 @@ currently in transit".
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Sequence
 
 import jax

@@ -10,6 +10,16 @@ Slot discipline maintained by ``repro.core.split.classify_split_compact``:
 active regions are compacted to the front and sorted by descending error
 estimate; finalised regions are folded into scalar accumulators and their
 slots freed.
+
+**Active-window invariant.**  Every operation that mutates the region
+population keeps the active slots contiguous in ``[0, n_active)``:
+``init_state`` fills the leading slots, ``classify_split_compact`` compacts
+survivors to the front and appends children directly after them, and
+``redistribution.redistribute`` only retires or splices the tail of the
+occupied block.  The adaptive drivers exploit this to evaluate the rule on a
+leading *window* of the SoA arrays sized from a geometric ladder
+(:func:`window_ladder` / :func:`select_window`) instead of all ``capacity``
+slots, so per-iteration cost scales with the live population.
 """
 
 from __future__ import annotations
@@ -149,6 +159,39 @@ def init_state(
     return st
 
 
+def window_ladder(capacity: int, min_window: int = 256) -> tuple[int, ...]:
+    """Geometric ladder of power-of-two eval-window sizes up to ``capacity``.
+
+    Each rung doubles the previous one, so at most
+    ``log2(capacity / min_window) + 1`` distinct window shapes (and therefore
+    jit-compiled eval variants) ever exist.  The top rung is always exactly
+    ``capacity`` so a full store degrades to the legacy full-capacity path.
+    """
+    if capacity < 1 or capacity & (capacity - 1):
+        raise ValueError("capacity must be a positive power of two")
+    w = max(1, min(min_window, capacity))
+    w = 1 << (w - 1).bit_length()  # round up to a power of two
+    ladder = []
+    while w < capacity:
+        ladder.append(w)
+        w <<= 1
+    ladder.append(capacity)
+    return tuple(ladder)
+
+
+def select_window(ladder: tuple[int, ...], n_active: int) -> int:
+    """Smallest ladder rung that covers ``n_active`` contiguous rows.
+
+    Host-side mirror of the device-side rung choice in
+    ``adaptive.make_switched_eval_step`` — both are left-searchsorted, so the
+    host- and device-driven loops pick identical windows for the same count.
+    ``n_active == 0`` selects the smallest rung (the drivers still dispatch
+    one eval before observing the empty population; keep it cheap).
+    """
+    ix = int(np.searchsorted(np.asarray(ladder), n_active, side="left"))
+    return ladder[min(ix, len(ladder) - 1)]
+
+
 def check_invariants(state: RegionState, lo, hi, atol: float = 1e-12) -> None:
     """Host-side structural checks (used by tests, not in the hot path)."""
     c = np.asarray(state.centers)
@@ -159,3 +202,5 @@ def check_invariants(state: RegionState, lo, hi, atol: float = 1e-12) -> None:
     assert np.all(c[act] + h[act] <= np.asarray(hi) + atol), "region above domain"
     fresh = np.asarray(state.fresh)
     assert not np.any(fresh & ~act), "fresh flag set on inactive slot"
+    # active-window invariant: actives contiguous at the front of the store
+    assert not np.any(act[int(act.sum()) :]), "active slots not contiguous"

@@ -41,7 +41,7 @@ class GenzMalikRule:
         noise_mult: float = 50.0,
         use_kernel: bool = False,
         interpret: bool = True,
-        block_regions: int = 256,
+        block_regions: int = 0,  # 0 = kernels.ops.DEFAULT_BLOCK_REGIONS
     ):
         self.d = d
         self.f = integrand
@@ -109,7 +109,12 @@ def make_rule(cfg: QuadratureConfig, integrand=None) -> Rule:
     f = integrand if integrand is not None else get_integrand(cfg.integrand).fn
     if cfg.rule == "genz_malik":
         return GenzMalikRule(
-            cfg.d, f, noise_mult=cfg.noise_mult, use_kernel=cfg.use_kernel
+            cfg.d,
+            f,
+            noise_mult=cfg.noise_mult,
+            use_kernel=cfg.use_kernel,
+            interpret=cfg.interpret,
+            block_regions=cfg.block_regions,
         )
     if cfg.rule == "gauss_kronrod":
         return GaussKronrodRule(cfg.d, f)

@@ -13,7 +13,7 @@ TPU-native rethink (DESIGN.md §2):
   ever exist in HBM — the kernel reads ``2 * d * BLOCK`` floats and writes
   ``(3 + d) * BLOCK`` floats, i.e. arithmetic intensity grows with
   ``n_nodes(d) = O(2^d)``, putting the kernel firmly in the compute-bound
-  regime of the v5e roofline (see benchmarks/kernel_roofline.py);
+  regime of the v5e roofline (see benchmarks/roofline.py);
 - the O(2^d) full-sign group is a `fori_loop` with the sign pattern decoded
   from the loop counter's bits (no table in memory);
 - the degree-7, degree-5, degree-3 sums and the per-axis fourth differences
@@ -125,10 +125,15 @@ def genz_malik_eval_soa(
     centers: jnp.ndarray,  # (d, C) SoA
     halfw: jnp.ndarray,  # (d, C)
     *,
-    block_regions: int = 256,
+    block_regions: int,
     interpret: bool = True,
 ):
-    """Run the fused GM kernel over an SoA batch. Returns (i7, i5, i3, diffs)."""
+    """Run the fused GM kernel over an SoA batch. Returns (i7, i5, i3, diffs).
+
+    ``block_regions`` is required (the batch must already be padded to a
+    block multiple): block sizing and padding live in ``kernels.ops``, the
+    single source of truth for the default.
+    """
     d, n = centers.shape
     if n % block_regions:
         raise ValueError(f"region count {n} not divisible by block {block_regions}")

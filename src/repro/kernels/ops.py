@@ -20,7 +20,23 @@ from repro.kernels.genz_malik_eval import genz_malik_eval_soa
 # working set per block is ~(4 + 4d) * BLOCK * 4 bytes; 512 lanes keeps the
 # d=13 worst case ~110 KiB, far under the ~16 MiB v5e VMEM, while giving the
 # MXU-free VPU pipeline full 128-lane occupancy x 4 sublane tiles.
+# This is the single source of truth for the block size: GenzMalikRule and
+# QuadratureConfig use 0 to mean "defer to this default".
 DEFAULT_BLOCK_REGIONS = 512
+
+
+def block_and_pad(b: int, block_regions: int = 0) -> tuple[int, int]:
+    """Resolve (block, pad) for a batch of ``b`` regions.
+
+    The single place that rounds an evaluation batch (in particular the
+    active-window sizes chosen by the adaptive drivers) up to a block
+    multiple: batches smaller than the block shrink the block to the batch,
+    larger batches are padded to the next multiple.  ``block_regions=0``
+    selects :data:`DEFAULT_BLOCK_REGIONS`.
+    """
+    block_regions = block_regions or DEFAULT_BLOCK_REGIONS
+    block = min(block_regions, b) if b % block_regions else block_regions
+    return block, (-b) % block
 
 
 def genz_malik_eval(
@@ -28,13 +44,12 @@ def genz_malik_eval(
     centers: jnp.ndarray,  # (B, d) AoS, as stored by RegionState
     halfw: jnp.ndarray,  # (B, d)
     *,
-    block_regions: int = DEFAULT_BLOCK_REGIONS,
+    block_regions: int = 0,
     interpret: bool = True,
 ):
     """Fused GM rule evaluation. Returns (i7, i5, i3, diffs[B, d])."""
     b, d = centers.shape
-    block = min(block_regions, b) if b % block_regions else block_regions
-    pad = (-b) % block
+    block, pad = block_and_pad(b, block_regions)
     ct = centers.T
     ht = halfw.T
     if pad:

@@ -1,0 +1,142 @@
+"""Active-window evaluation: ladder selection + trajectory parity.
+
+The windowed eval path must walk the *same* refinement trajectory as the
+legacy full-capacity path — the compaction invariant guarantees every fresh
+region sits inside the window, so the only difference is wasted work on dead
+slots.  Parity is asserted per-iteration via the driver callback.
+"""
+
+import pytest
+
+from repro.core.adaptive import integrate, integrate_device
+from repro.core.config import QuadratureConfig
+from repro.core.distributed import integrate_distributed
+from repro.core.region_store import select_window, window_ladder
+
+
+# --- bucket-ladder selection --------------------------------------------------
+
+
+def test_window_ladder_geometric():
+    lad = window_ladder(1 << 14, 256)
+    assert lad[0] == 256
+    assert lad[-1] == 1 << 14
+    assert all(b == 2 * a for a, b in zip(lad, lad[1:]))
+
+
+def test_window_ladder_min_clipped_to_capacity():
+    assert window_ladder(128, 256) == (128,)
+    assert window_ladder(1, 256) == (1,)
+
+
+def test_window_ladder_rounds_min_up_to_power_of_two():
+    assert window_ladder(1024, 100)[0] == 128
+
+
+def test_window_ladder_rejects_non_power_of_two_capacity():
+    with pytest.raises(ValueError):
+        window_ladder(1000)
+
+
+def test_select_window_edge_cases():
+    lad = window_ladder(1 << 14, 256)
+    assert select_window(lad, 0) == 256  # empty population -> cheapest rung
+    assert select_window(lad, 1) == 256
+    assert select_window(lad, 256) == 256  # exact rung
+    assert select_window(lad, 257) == 512
+    assert select_window(lad, 1000) == 1024  # non-power-of-two count
+    assert select_window(lad, (1 << 14) - 1) == 1 << 14
+    assert select_window(lad, 1 << 14) == 1 << 14  # full store
+
+
+def test_host_and_device_rung_choice_agree():
+    # the device path (make_switched_eval_step) picks the rung with a
+    # left-searchsorted over the ladder; the host path uses select_window —
+    # they must agree for every count or host/device trajectories diverge
+    import jax.numpy as jnp
+
+    lad = window_ladder(1 << 12, 256)
+    rungs = jnp.asarray(lad, jnp.int32)
+    for n in [0, 1, 255, 256, 257, 1000, 2047, 2048, 4095, 1 << 12]:
+        ix = min(int(jnp.searchsorted(rungs, n)), len(lad) - 1)
+        assert lad[ix] == select_window(lad, n)
+
+
+def test_config_validates_window_knobs():
+    with pytest.raises(ValueError):
+        QuadratureConfig(d=2, eval_window_min=100).validate()
+    with pytest.raises(ValueError):
+        QuadratureConfig(d=2, sync_every=0).validate()
+    with pytest.raises(ValueError):
+        QuadratureConfig(d=2, block_regions=100).validate()
+
+
+# --- trajectory parity --------------------------------------------------------
+
+PARITY_CASES = [
+    # (integrand, d, rule, rel_tol)
+    ("f4", 3, "genz_malik", 1e-7),
+    ("f2", 3, "genz_malik", 1e-6),
+    ("f1", 2, "gauss_kronrod", 1e-8),
+    ("f3", 3, "gauss_kronrod", 1e-7),
+]
+
+
+@pytest.mark.parametrize("name,d,rule,rel_tol", PARITY_CASES)
+def test_windowed_matches_full_trajectory(name, d, rule, rel_tol):
+    base = dict(
+        d=d, integrand=name, rel_tol=rel_tol, capacity=1 << 13, rule=rule,
+        max_iters=200,
+    )
+    traj_w, traj_f = [], []
+    res_w = integrate(
+        QuadratureConfig(eval_window=True, **base),
+        callback=lambda *a: traj_w.append(a),
+    )
+    res_f = integrate(
+        QuadratureConfig(eval_window=False, **base),
+        callback=lambda *a: traj_f.append(a),
+    )
+    assert res_w.status == res_f.status
+    assert res_w.iterations == res_f.iterations
+    assert len(traj_w) == len(traj_f)
+    for (it_w, i_w, e_w, n_w), (it_f, i_f, e_f, n_f) in zip(traj_w, traj_f):
+        assert (it_w, n_w) == (it_f, n_f)
+        assert i_w == pytest.approx(i_f, rel=1e-12)
+        assert e_w == pytest.approx(e_f, rel=1e-12)
+    assert res_w.integral == pytest.approx(res_f.integral, rel=1e-12)
+    assert res_w.error == pytest.approx(res_f.error, rel=1e-12)
+    assert res_w.n_evals == res_f.n_evals
+
+
+def test_device_driver_windowed_matches_full():
+    base = dict(d=3, integrand="f4", rel_tol=1e-6, capacity=1 << 12)
+    w = integrate_device(QuadratureConfig(eval_window=True, **base))
+    f = integrate_device(QuadratureConfig(eval_window=False, **base))
+    assert w.status == "converged"
+    assert w.iterations == f.iterations
+    assert w.integral == pytest.approx(f.integral, rel=1e-12)
+    assert w.n_evals == f.n_evals
+
+
+def test_windowed_kernel_path_matches_full():
+    base = dict(
+        d=3, integrand="f4", rel_tol=1e-6, capacity=1 << 12, use_kernel=True
+    )
+    w = integrate(QuadratureConfig(eval_window=True, **base))
+    f = integrate(QuadratureConfig(eval_window=False, **base))
+    assert w.status == "converged"
+    assert w.integral == pytest.approx(f.integral, rel=1e-12)
+    assert w.n_evals == f.n_evals
+
+
+def test_distributed_sync_every_parity():
+    # single in-process device; the fused dispatch must replay the exact
+    # per-iteration history that the K=1 host loop records
+    base = dict(d=3, integrand="f4", rel_tol=1e-6, capacity=1 << 12, max_iters=100)
+    r1 = integrate_distributed(QuadratureConfig(sync_every=1, **base))
+    r4 = integrate_distributed(QuadratureConfig(sync_every=4, **base))
+    assert r1.status == r4.status == "converged"
+    assert r1.iterations == r4.iterations
+    assert r1.history == r4.history
+    assert r1.integral == pytest.approx(r4.integral, rel=1e-12)
