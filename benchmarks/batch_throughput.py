@@ -1,0 +1,110 @@
+"""Fleet throughput: serial `integrate` loop vs the continuous-batching engine.
+
+The quantity a quadrature *service* cares about is problems/sec over a fleet
+of related integrals.  The serial loop pays per-problem dispatch overhead
+(one small XLA launch per iteration per problem) and leaves the hardware
+under-occupied on small populations; the batch engine vmaps the adaptive
+step over `batch_slots` problems so every dispatch carries B problems'
+worth of regions, and continuous batching keeps the slots full as
+heterogeneous problems converge at different iterations.
+
+Reports problems/sec at B in {8, 32, 128} for both paths (same thetas, same
+tolerances) plus the speedup; records land in results/benchmarks/.
+
+The serial baseline re-traces `integrate`'s jitted steps for every problem
+(each theta is a new closure — the seed API has no traced-theta path), so
+its cost is dominated by compilation and exactly linear in B; at B = 128 it
+is therefore timed on a 16-problem subsample and extrapolated (flagged
+``serial_extrapolated`` in the record), while the batch engine is always
+timed on the full fleet.
+"""
+
+import time
+
+SERIAL_SAMPLE_CAP = 16
+
+
+def run(fast: bool = True):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import QuadratureConfig, integrate
+    from repro.core.integrands import bind, get_param
+    from repro.service import integrate_batch
+
+    d = 3
+    family = get_param("genz_gaussian")
+    batches = (8, 32) if fast else (8, 32, 128)
+    out = []
+    for B in batches:
+        cfg = QuadratureConfig(
+            d=d,
+            integrand="genz_gaussian",
+            rel_tol=1e-6,
+            capacity=1 << 11,
+            batch_slots=min(B, 32),
+            max_iters=200,
+        )
+        rng = np.random.default_rng(1234 + B)
+        thetas = [family.sample_theta(d, rng) for _ in range(B)]
+
+        # batch engine (compile amortised over the fleet: time includes the
+        # first-call compilation of each window rung, exactly what a cold
+        # service pays once and a warm service never pays again — report both)
+        t0 = time.perf_counter()
+        batch_results = integrate_batch(cfg, thetas)
+        t_batch_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        batch_results = integrate_batch(cfg, thetas)
+        t_batch = time.perf_counter() - t0
+
+        # serial loop: same config/thetas, one adaptive run per problem
+        n_serial = min(B, SERIAL_SAMPLE_CAP)
+        serial_results = []
+        t0 = time.perf_counter()
+        for theta in thetas[:n_serial]:
+            serial_results.append(integrate(cfg, bind(family, theta).fn))
+        t_serial = (time.perf_counter() - t0) * (B / n_serial)
+
+        for br, sr in zip(batch_results[:n_serial], serial_results):
+            assert br.status == sr.status == "converged", (br, sr)
+            assert br.integral == sr.integral, "batch/serial parity broken"
+        out.append(
+            {
+                "B": B,
+                "d": d,
+                "batch_slots": cfg.batch_slots,
+                "rel_tol": cfg.rel_tol,
+                "capacity": cfg.capacity,
+                "serial_s": t_serial,
+                "serial_extrapolated": n_serial < B,
+                "batch_s": t_batch,
+                "batch_cold_s": t_batch_cold,
+                "serial_problems_per_s": B / t_serial,
+                "batch_problems_per_s": B / t_batch,
+                "speedup": t_serial / t_batch,
+                "speedup_cold": t_serial / t_batch_cold,
+            }
+        )
+        from benchmarks._common import save_results
+
+        save_results("batch_throughput", out)  # incremental: keep partial runs
+    return out
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"batch_throughput/B{r['B']}_slots{r['batch_slots']}",
+            r["batch_s"] / r["B"] * 1e6,
+            f"problems_per_s={r['batch_problems_per_s']:.2f};"
+            f"serial_problems_per_s={r['serial_problems_per_s']:.2f};"
+            f"speedup={r['speedup']:.2f};speedup_cold={r['speedup_cold']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -19,6 +19,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        batch_throughput,
         eval_window,
         fig2a_runtime,
         fig2b_accuracy,
@@ -38,6 +39,7 @@ def main() -> None:
         "fig4b": fig4b_idle,
         "kernel": kernel_bench,
         "eval_window": eval_window,
+        "batch_throughput": batch_throughput,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -25,7 +25,7 @@ def main_worker() -> None:
 
     print(f"devices: {len(jax.devices())}")
     base = dict(d=4, integrand="f6", rel_tol=1e-6, capacity=1 << 13, max_iters=200)
-    for redis in ("xor", "off"):
+    for redis in ("ring", "off"):
         cfg = QuadratureConfig(redistribution=redis, **base)
         res = integrate_distributed(cfg)
         exact = get("f6").exact(4)

@@ -98,16 +98,25 @@ def make_switched_eval_step(
     """
     if not cfg.eval_window:
         return make_eval_step(cfg, rule)
-    ladder = region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
+    ladder = eval_ladder(cfg)
     branches = [make_eval_step(cfg, rule, window=w) for w in ladder]
     rungs = jnp.asarray(ladder, jnp.int32)
 
     def eval_step(state: RegionState) -> RegionState:
         n = jnp.sum(state.active).astype(jnp.int32)
-        ix = jnp.minimum(jnp.searchsorted(rungs, n), len(ladder) - 1)
+        ix = region_store.rung_index(rungs, n)
         return jax.lax.switch(ix, branches, state)
 
     return eval_step
+
+
+def eval_ladder(cfg: QuadratureConfig) -> tuple[int, ...]:
+    """The eval-window ladder, or the single full-capacity rung when the
+    active-window path is disabled — shared by every driver so they can
+    never disagree on the available window shapes."""
+    if not cfg.eval_window:
+        return (cfg.capacity,)
+    return region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
 
 
 def donate_argnums(platform: Optional[str] = None) -> tuple[int, ...]:
@@ -125,11 +134,17 @@ def donate_argnums(platform: Optional[str] = None) -> tuple[int, ...]:
 
 def make_advance_step(
     cfg: QuadratureConfig, total_volume: float, domain_width: np.ndarray
-) -> Callable[[RegionState], RegionState]:
-    """Classify (finalise negligible) + split survivors + compact."""
+) -> Callable[..., RegionState]:
+    """Classify (finalise negligible) + split survivors + compact.
+
+    ``budget`` / ``rel_tol`` override the config-derived error budget and
+    relative tolerance (the batch service passes per-request tolerances as
+    traced values); ``None`` derives them from ``cfg`` as the serial
+    drivers do.
+    """
     width = jnp.asarray(domain_width)
 
-    def advance(state: RegionState) -> RegionState:
+    def advance(state: RegionState, budget=None, rel_tol=None) -> RegionState:
         integral, _ = state.global_estimates()
         fin = classify(
             cfg,
@@ -140,6 +155,8 @@ def make_advance_step(
             integral,
             total_volume,
             width,
+            budget=budget,
+            rel_tol=rel_tol,
         )
         state = classify_split_compact(state, fin)
         return dataclasses.replace(state, it=state.it + 1)
@@ -160,7 +177,11 @@ def _setup(cfg: QuadratureConfig, integrand):
     return cfg, lo, hi, total_volume, rule, state
 
 
-def _status(converged: bool, n_active: int, it: int, cfg, overflowed: bool) -> str:
+def result_status(
+    converged: bool, n_active: int, it: int, cfg, overflowed: bool
+) -> str:
+    """Terminal-status taxonomy shared by the serial drivers and the batch
+    service (which promises 'statuses as in AdaptiveResult')."""
     if converged:
         return "converged"
     if overflowed:
@@ -181,11 +202,7 @@ def integrate(
     cfg, lo, hi, total_volume, rule, state = _setup(cfg, integrand)
 
     donate = donate_argnums()
-    ladder = (
-        region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
-        if cfg.eval_window
-        else (cfg.capacity,)
-    )
+    ladder = eval_ladder(cfg)
     # One jitted eval variant per ladder rung, compiled on first use.  The
     # host loop already syncs the active count each iteration, so the next
     # window is known before dispatch and the switch costs nothing on device.
@@ -232,7 +249,7 @@ def integrate(
     return AdaptiveResult(
         integral=integral,
         error=error,
-        status=_status(
+        status=result_status(
             converged, int(n_active), int(state.it), cfg, bool(state.overflowed)
         ),
         iterations=int(state.it),
@@ -271,7 +288,7 @@ def integrate_device(
     return AdaptiveResult(
         integral=integral,
         error=error,
-        status=_status(
+        status=result_status(
             converged, n_active, int(final.it), cfg, bool(final.overflowed)
         ),
         iterations=int(final.it),

@@ -42,14 +42,23 @@ def classify(
     total_volume: float,
     domain_width: jnp.ndarray,
     n_active: jnp.ndarray | None = None,
+    budget: jnp.ndarray | None = None,
+    rel_tol: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Return the mask of active regions to finalise this iteration.
 
     ``n_active`` is the *global* active-region count in distributed runs
     (so every device applies the same equal-share threshold); defaults to
-    the local count.
+    the local count.  ``budget`` and ``rel_tol`` override the config-derived
+    error budget and relative tolerance — the batch service passes
+    per-request tolerances as traced values, so neither threshold can be
+    baked in from ``cfg`` there (``rel_tol`` only affects the aggressive
+    classifier's local-prune term).
     """
-    budget = error_budget(cfg, global_estimate)
+    if budget is None:
+        budget = error_budget(cfg, global_estimate)
+    if rel_tol is None:
+        rel_tol = cfg.rel_tol
     vol = jnp.prod(2.0 * halfw, axis=-1)
     if n_active is None:
         n_active = jnp.sum(active)
@@ -67,7 +76,7 @@ def classify(
         # Fast where the integrand is tiny (Gaussian tails) but can overshoot
         # the global target exactly as the paper reports for f4.
         small = err <= jnp.maximum(
-            cfg.rel_tol * jnp.abs(est), 0.25 * budget / n_active.astype(err.dtype)
+            rel_tol * jnp.abs(est), 0.25 * budget / n_active.astype(err.dtype)
         )
 
     # minimum refinement depth before a region may be finalised (see

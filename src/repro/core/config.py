@@ -40,6 +40,22 @@ class QuadratureConfig:
     # of distinct compiled shapes stays at log2(capacity / eval_window_min).
     eval_window: bool = True  # evaluate only the leading active window
     eval_window_min: int = 256  # smallest ladder bucket (power of two)
+    # --- batch service -------------------------------------------------------
+    # The continuous-batching engine (repro.service) runs ``batch_slots``
+    # independent problems of this config's shape in lockstep under vmap; a
+    # slot freed by a converged problem is refilled from the request queue
+    # every ``admit_every`` iterations.
+    batch_slots: int = 16
+    admit_every: int = 1
+    # An overflowed slot may keep refining this many further iterations
+    # before the scheduler evicts it with status "capacity".  The serial
+    # driver grinds past capacity pressure and often still converges
+    # (children that don't fit are dropped, the survivors keep shrinking
+    # the error), so evicting at *first* overflow would both break parity
+    # with `integrate` and throw away near-finished work; the grace period
+    # keeps parity for transiently-saturated problems while still freeing
+    # the slot from hopeless ones long before max_iters.
+    evict_patience: int = 16
     # --- distributed ---------------------------------------------------------
     message_cap: int = 512  # max regions per transfer (paper default)
     init_regions_per_device: int = 8  # paper: 8 subdomains per rank at startup
@@ -97,6 +113,12 @@ class QuadratureConfig:
             raise ValueError("block_regions must be a power of two (or 0 = default)")
         if self.sync_every < 1:
             raise ValueError("sync_every must be >= 1")
+        if self.batch_slots < 1:
+            raise ValueError("batch_slots must be >= 1")
+        if self.admit_every < 1:
+            raise ValueError("admit_every must be >= 1")
+        if self.evict_patience < 0:
+            raise ValueError("evict_patience must be >= 0")
         if len(self.domain_lo) not in (0, self.d):
             raise ValueError("domain_lo must be empty or length d")
         if len(self.domain_hi) not in (0, self.d):

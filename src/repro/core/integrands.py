@@ -7,6 +7,13 @@ by the Pallas kernel (regions on the 128-wide lane axis).
 
 Exact values are analytic (separable products, the Genz corner-peak
 inclusion-exclusion formula, and a multinomial DP for f7) over [0, 1]^d.
+
+Beyond the fixed f1..f7 suite, :data:`PARAM_REGISTRY` holds *parameterized
+families* ``f(x; theta)`` (Genz Gaussian / product-peak with per-problem
+``a``, ``u`` coefficients, monomials) used by the batch quadrature service —
+fleets of related integrals differ only in theta, so one compiled program
+serves the whole fleet.  Families are reachable from config/CLI through
+spec strings (see :func:`from_spec`).
 """
 
 from __future__ import annotations
@@ -14,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import lru_cache
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +35,26 @@ class Integrand:
     exact: Callable[[int], float]  # exact integral over [0,1]^d
     description: str = ""
     smooth: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamIntegrand:
+    """A *family* of integrands ``f(x; theta)`` sharing one domain.
+
+    ``fn`` takes the SoA coordinates ``(d, N)`` plus a theta pytree (a dict of
+    per-axis coefficient arrays, see ``theta_fields``) and must be traceable
+    with theta as a traced argument — the batch service vmaps over a leading
+    problem axis on every theta leaf.  ``exact(d, theta)`` is the analytic
+    reference used for validation, ``sample_theta(d, rng)`` draws a random
+    problem instance (used by the fleet benchmarks and the serving CLI).
+    """
+
+    name: str
+    fn: Callable[[jnp.ndarray, Any], jnp.ndarray]  # ((d, N), theta) -> (N,)
+    exact: Callable[[int, Any], float]
+    sample_theta: Callable[[int, np.random.Generator], dict]
+    theta_fields: tuple[str, ...]  # positional order for spec strings
+    description: str = ""
 
 
 def _axis_coeff(x: jnp.ndarray, start: int = 1) -> jnp.ndarray:
@@ -166,43 +193,208 @@ def f7_exact(d: int) -> float:
     return float(_f7_dp(d, _F7_POW))
 
 
-# --- auxiliary integrands for property tests & demos ------------------------
+# --- parameterized families (Genz + monomial) --------------------------------
+#
+# Each family is an ``f(x; theta)`` over [0,1]^d with an analytic exact value
+# per theta.  They back the batch quadrature service (fleets of related
+# integrals, one theta per request) and are reachable from config/CLI via
+# spec strings parsed by :func:`from_spec`.
+
+
+def _col(theta_leaf, x) -> jnp.ndarray:
+    """Theta leaf (d,) -> column (d, 1) in the coordinate dtype.
+
+    Shapes are static under tracing, so the length check fires at trace
+    time: a theta of the wrong length would otherwise silently broadcast
+    in the integrand while the analytic ``exact`` truncates to d — two
+    different problems agreeing on neither.
+    """
+    arr = jnp.asarray(theta_leaf, x.dtype)
+    if arr.shape != (x.shape[0],):
+        raise ValueError(
+            f"theta leaf has shape {arr.shape}, expected ({x.shape[0]},) "
+            f"for a d={x.shape[0]} problem"
+        )
+    return arr[:, None]
+
+
+def _genz_gaussian_fn(x: jnp.ndarray, theta) -> jnp.ndarray:
+    return jnp.exp(-jnp.sum((_col(theta["a"], x) * (x - _col(theta["u"], x))) ** 2, axis=0))
+
+
+def _genz_gaussian_exact(d: int, theta) -> float:
+    a = np.asarray(theta["a"], np.float64)
+    u = np.asarray(theta["u"], np.float64)
+    p = 1.0
+    for ai, ui in zip(a[:d], u[:d]):
+        p *= (
+            math.sqrt(math.pi)
+            / (2.0 * ai)
+            * (math.erf(ai * (1.0 - ui)) + math.erf(ai * ui))
+        )
+    return float(p)
+
+
+def _genz_gaussian_sample(d: int, rng: np.random.Generator) -> dict:
+    return {"a": rng.uniform(3.0, 10.0, d), "u": rng.uniform(0.2, 0.8, d)}
+
+
+def _genz_product_peak_fn(x: jnp.ndarray, theta) -> jnp.ndarray:
+    a = _col(theta["a"], x)
+    u = _col(theta["u"], x)
+    return jnp.prod(1.0 / (a**-2 + (x - u) ** 2), axis=0)
+
+
+def _genz_product_peak_exact(d: int, theta) -> float:
+    a = np.asarray(theta["a"], np.float64)
+    u = np.asarray(theta["u"], np.float64)
+    p = 1.0
+    for ai, ui in zip(a[:d], u[:d]):
+        p *= ai * (math.atan(ai * (1.0 - ui)) + math.atan(ai * ui))
+    return float(p)
+
+
+def _genz_product_peak_sample(d: int, rng: np.random.Generator) -> dict:
+    return {"a": rng.uniform(3.0, 10.0, d), "u": rng.uniform(0.2, 0.8, d)}
+
+
+def _monomial_fn(x: jnp.ndarray, theta) -> jnp.ndarray:
+    return jnp.prod(x ** _col(theta["p"], x), axis=0)
+
+
+def _monomial_exact(d: int, theta) -> float:
+    p = np.asarray(theta["p"], np.float64)
+    return float(np.prod(1.0 / (p[:d] + 1.0)))
+
+
+def _monomial_sample(d: int, rng: np.random.Generator) -> dict:
+    return {"p": rng.integers(0, 5, d).astype(np.float64)}
+
+
+PARAM_REGISTRY: dict[str, ParamIntegrand] = {
+    "genz_gaussian": ParamIntegrand(
+        "genz_gaussian",
+        _genz_gaussian_fn,
+        _genz_gaussian_exact,
+        _genz_gaussian_sample,
+        ("a", "u"),
+        "exp(-sum a_i^2 (x_i - u_i)^2)",
+    ),
+    "genz_product_peak": ParamIntegrand(
+        "genz_product_peak",
+        _genz_product_peak_fn,
+        _genz_product_peak_exact,
+        _genz_product_peak_sample,
+        ("a", "u"),
+        "prod 1 / (a_i^-2 + (x_i - u_i)^2)",
+    ),
+    "monomial": ParamIntegrand(
+        "monomial",
+        _monomial_fn,
+        _monomial_exact,
+        _monomial_sample,
+        ("p",),
+        "prod x_i^{p_i}",
+    ),
+}
+
+
+def get_param(name: str) -> ParamIntegrand:
+    try:
+        return PARAM_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown integrand family {name!r}; known: {sorted(PARAM_REGISTRY)}"
+        ) from None
+
+
+def bind(family: ParamIntegrand, theta) -> Integrand:
+    """Freeze one theta into a plain :class:`Integrand` (serial drivers)."""
+    label = ",".join(
+        np.array2string(np.asarray(theta[k]), precision=3, separator=",")
+        for k in family.theta_fields
+    )
+
+    def exact(d: int) -> float:
+        for k in family.theta_fields:
+            n = np.asarray(theta[k]).shape[0]
+            if n != d:
+                raise ValueError(
+                    f"{family.name}: theta field {k!r} has length {n} "
+                    f"but the problem is d={d}"
+                )
+        return family.exact(d, theta)
+
+    return Integrand(
+        name=f"{family.name}:{label}",
+        fn=lambda x: family.fn(x, theta),
+        exact=exact,
+        description=family.description,
+    )
+
+
+def parse_spec(spec: str) -> tuple[ParamIntegrand, dict]:
+    """Parse ``family:v,v,..[:v,v,..]`` into ``(family, theta)``.
+
+    One colon-separated group of comma-separated floats per theta field, in
+    ``theta_fields`` order — e.g. ``genz_gaussian:5,5:0.3,0.7`` is the d=2
+    Gaussian with a=(5,5), u=(0.3,0.7); ``monomial:2,0,3`` is x^2 z^3.
+    The single source of truth for the spec grammar — :func:`from_spec`
+    and the CLIs both parse through here.
+    """
+    family_name, _, rest = spec.partition(":")
+    family = get_param(family_name)
+    if not rest:
+        raise ValueError(
+            f"family {family_name!r} needs theta groups "
+            f"{family.theta_fields} — e.g. {family_name!r} + ':' + "
+            "one comma-separated float list per field"
+        )
+    groups = rest.split(":")
+    if len(groups) != len(family.theta_fields):
+        raise ValueError(
+            f"{spec!r}: expected {len(family.theta_fields)} theta group(s) "
+            f"{family.theta_fields}, got {len(groups)}"
+        )
+    try:
+        theta = {
+            k: np.asarray([float(v) for v in g.split(",")], np.float64)
+            for k, g in zip(family.theta_fields, groups)
+        }
+    except ValueError:
+        raise ValueError(f"{spec!r}: theta groups must be comma-separated floats")
+    sizes = {v.shape[0] for v in theta.values()}
+    if len(sizes) != 1:
+        raise ValueError(f"{spec!r}: theta groups must have equal length, got {sizes}")
+    return family, theta
+
+
+def from_spec(spec: str) -> Integrand:
+    """Bind a family spec string (see :func:`parse_spec`) into an Integrand.
+
+    This is what makes the families reachable from ``QuadratureConfig``
+    and the CLI, which only carry integrand *names*.
+    """
+    family, theta = parse_spec(spec)
+    return bind(family, theta)
+
+
+# --- auxiliary factories (public API compatibility wrappers over bind) ------
 
 
 def make_monomial(powers: tuple[int, ...]) -> Integrand:
     """prod x_i^{p_i} with exact integral prod 1/(p_i + 1) over [0,1]^d."""
-    p = np.asarray(powers, dtype=np.float64)
-
-    def fn(x):
-        return jnp.prod(x ** jnp.asarray(p, dtype=x.dtype)[:, None], axis=0)
-
-    exact = float(np.prod(1.0 / (p + 1.0)))
-    return Integrand(
-        name=f"monomial{powers}", fn=fn, exact=lambda d: exact, smooth=True
+    return bind(
+        PARAM_REGISTRY["monomial"], {"p": np.asarray(powers, np.float64)}
     )
 
 
 def make_genz_gaussian(a: np.ndarray, u: np.ndarray) -> Integrand:
     """Generic Genz Gaussian exp(-sum a_i^2 (x_i - u_i)^2) with exact value."""
-    a = np.asarray(a, np.float64)
-    u = np.asarray(u, np.float64)
-
-    def fn(x):
-        aa = jnp.asarray(a, x.dtype)[:, None]
-        uu = jnp.asarray(u, x.dtype)[:, None]
-        return jnp.exp(-jnp.sum((aa * (x - uu)) ** 2, axis=0))
-
-    def exact(d: int) -> float:
-        p = 1.0
-        for ai, ui in zip(a[:d], u[:d]):
-            p *= (
-                math.sqrt(math.pi)
-                / (2.0 * ai)
-                * (math.erf(ai * (1.0 - ui)) + math.erf(ai * ui))
-            )
-        return p
-
-    return Integrand(name="genz_gaussian", fn=fn, exact=exact)
+    return bind(
+        PARAM_REGISTRY["genz_gaussian"],
+        {"a": np.asarray(a, np.float64), "u": np.asarray(u, np.float64)},
+    )
 
 
 REGISTRY: dict[str, Integrand] = {
@@ -217,9 +409,12 @@ REGISTRY: dict[str, Integrand] = {
 
 
 def get(name: str) -> Integrand:
-    try:
+    """Resolve an integrand name: fixed registry entry or family spec string."""
+    if name in REGISTRY:
         return REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown integrand {name!r}; known: {sorted(REGISTRY)}"
-        ) from None
+    if ":" in name:
+        return from_spec(name)
+    raise KeyError(
+        f"unknown integrand {name!r}; known: {sorted(REGISTRY)} plus "
+        f"family specs {sorted(PARAM_REGISTRY)} (e.g. 'genz_gaussian:5,5:0.3,0.7')"
+    )

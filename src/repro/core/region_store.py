@@ -159,6 +159,27 @@ def init_state(
     return st
 
 
+def stacked_empty_state(n: int, capacity: int, d: int, dtype) -> RegionState:
+    """Empty store with a leading ``(n,)`` axis on every leaf.
+
+    Used by the batch service (one sub-store per problem slot); each slice
+    along the leading axis independently satisfies the active-window
+    invariant.
+    """
+    one = empty_state(capacity, d, dtype)
+    return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), one)
+
+
+def write_slot(stacked: RegionState, slot, single: RegionState) -> RegionState:
+    """Overwrite slice ``slot`` of a stacked store with a single-store state.
+
+    Jit-safe with a traced ``slot`` index — the batch service uses this to
+    splice a fresh initial partition into a slot freed by a converged
+    problem without recompiling per slot.
+    """
+    return jax.tree.map(lambda dst, src: dst.at[slot].set(src), stacked, single)
+
+
 def window_ladder(capacity: int, min_window: int = 256) -> tuple[int, ...]:
     """Geometric ladder of power-of-two eval-window sizes up to ``capacity``.
 
@@ -177,6 +198,16 @@ def window_ladder(capacity: int, min_window: int = 256) -> tuple[int, ...]:
         w <<= 1
     ladder.append(capacity)
     return tuple(ladder)
+
+
+def rung_index(rungs: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Index of the smallest ladder rung covering ``n`` (clamped to the top).
+
+    The device-side rung pick, shared by every ``lax.switch``-dispatched
+    windowed eval (single-device, distributed, batch service) so all paths
+    agree bit-for-bit with the host-side :func:`select_window`.
+    """
+    return jnp.minimum(jnp.searchsorted(rungs, n), rungs.shape[0] - 1)
 
 
 def select_window(ladder: tuple[int, ...], n_active: int) -> int:

@@ -106,6 +106,17 @@ class GaussKronrodRule:
 
 
 def make_rule(cfg: QuadratureConfig, integrand=None) -> Rule:
+    if cfg.use_kernel and integrand is None and ":" in cfg.integrand:
+        # Family-spec integrands close over theta coefficient arrays, and
+        # pallas_call rejects captured constant arrays ("You should pass
+        # them as inputs") — the same constraint that forced f1/f3/f6 onto
+        # iota-generated coefficients.  Fail with an actionable message
+        # instead of a cryptic trace-time error.
+        raise ValueError(
+            f"integrand {cfg.integrand!r} is a parameterized family, which "
+            "is not supported on the Pallas kernel path (theta arrays would "
+            "be captured constants); set use_kernel=False"
+        )
     f = integrand if integrand is not None else get_integrand(cfg.integrand).fn
     if cfg.rule == "genz_malik":
         return GenzMalikRule(

@@ -20,8 +20,39 @@ def main() -> None:
     ap.add_argument("--classifier", default="robust", choices=["robust", "aggressive"])
     ap.add_argument("--rule", default="genz_malik", choices=["genz_malik", "gauss_kronrod"])
     ap.add_argument("--use-kernel", action="store_true", help="Pallas GM kernel")
+    ap.add_argument(
+        "--interpret",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="Pallas interpret mode (keep on for CPU; --no-interpret on TPU)",
+    )
+    ap.add_argument(
+        "--block-regions", type=int, default=0, help="kernel lanes per block (0 = default)"
+    )
+    ap.add_argument(
+        "--eval-window",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="evaluate only the leading active window of the region store",
+    )
+    ap.add_argument(
+        "--eval-window-min", type=int, default=256, help="smallest window ladder rung"
+    )
+    ap.add_argument("--max-iters", type=int, default=600)
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--message-cap", type=int, default=512)
+    ap.add_argument(
+        "--redistribution",
+        default="ring",
+        choices=["ring", "off"],
+        help="distributed load redistribution policy",
+    )
+    ap.add_argument(
+        "--sync-every",
+        type=int,
+        default=4,
+        help="iterations fused per dispatch in the distributed driver",
+    )
     ap.add_argument("--device-loop", action="store_true", help="lax.while_loop driver")
     args = ap.parse_args()
 
@@ -40,7 +71,7 @@ def main() -> None:
 
     from repro.core import QuadratureConfig, integrate, integrate_device
     from repro.core.distributed import integrate_distributed
-    from repro.core.integrands import REGISTRY
+    from repro.core.integrands import REGISTRY, get
 
     cfg = QuadratureConfig(
         d=args.d,
@@ -50,7 +81,14 @@ def main() -> None:
         classifier=args.classifier,
         rule=args.rule,
         use_kernel=args.use_kernel,
+        interpret=args.interpret,
+        block_regions=args.block_regions,
+        eval_window=args.eval_window,
+        eval_window_min=args.eval_window_min,
+        max_iters=args.max_iters,
         message_cap=args.message_cap,
+        redistribution=args.redistribution,
+        sync_every=args.sync_every,
     )
     if args.devices > 1:
         res = integrate_distributed(cfg)
@@ -62,8 +100,9 @@ def main() -> None:
     else:
         res = integrate(cfg)
         print(res.summary())
-    if args.integrand in REGISTRY:
-        exact = REGISTRY[args.integrand].exact(args.d)
+    if args.integrand in REGISTRY or ":" in args.integrand:
+        # fixed registry entries and family specs (e.g. genz_gaussian:5,5:.3,.7)
+        exact = get(args.integrand).exact(args.d)
         rel = abs(res.integral - exact) / max(abs(exact), 1e-300)
         print(f"exact={exact:.15e} true_rel_err={rel:.3e}")
 

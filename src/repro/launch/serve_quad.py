@@ -1,0 +1,99 @@
+"""Batch quadrature service launcher (continuous batching over a request fleet).
+
+Serve 64 random Genz-Gaussian problems through 16 batch slots:
+  PYTHONPATH=src python -m repro.launch.serve_quad --family genz_gaussian \
+      --d 3 --n-requests 64 --batch-slots 16
+Explicit problems (one family spec per --request, see integrands.from_spec):
+  PYTHONPATH=src python -m repro.launch.serve_quad --d 2 \
+      --request genz_gaussian:5,5:0.3,0.7 --request genz_gaussian:8,2:0.5,0.5
+"""
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--family", default="genz_gaussian")
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument(
+        "--n-requests", type=int, default=32, help="random problems to sample"
+    )
+    ap.add_argument(
+        "--request",
+        action="append",
+        default=[],
+        metavar="SPEC",
+        help="explicit family spec (repeatable; overrides --n-requests)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rel-tol", type=float, default=1e-6)
+    ap.add_argument("--capacity", type=int, default=1 << 12)
+    ap.add_argument("--batch-slots", type=int, default=16)
+    ap.add_argument("--admit-every", type=int, default=1)
+    ap.add_argument("--eval-window-min", type=int, default=256)
+    ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument(
+        "--validate", action="store_true", help="print true error vs analytic exact"
+    )
+    args = ap.parse_args()
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import QuadratureConfig
+    from repro.core.integrands import get_param, parse_spec
+    from repro.service import QuadRequest, serve
+
+    family = get_param(args.family)
+    cfg = QuadratureConfig(
+        d=args.d,
+        integrand=args.family,
+        rel_tol=args.rel_tol,
+        capacity=args.capacity,
+        batch_slots=args.batch_slots,
+        admit_every=args.admit_every,
+        eval_window_min=args.eval_window_min,
+        max_iters=args.max_iters,
+    )
+
+    if args.request:
+        thetas = []
+        for spec in args.request:
+            req_family, theta = parse_spec(spec)
+            if req_family.name != family.name:
+                raise SystemExit(
+                    f"--request {spec!r} names family {req_family.name!r}, "
+                    f"but --family is {args.family!r}"
+                )
+            thetas.append(theta)
+    else:
+        rng = np.random.default_rng(args.seed)
+        thetas = [family.sample_theta(args.d, rng) for _ in range(args.n_requests)]
+
+    requests = [QuadRequest(req_id=i, theta=t) for i, t in enumerate(thetas)]
+    print(
+        f"serving {len(requests)} x {family.name} (d={args.d}) through "
+        f"{cfg.batch_slots} slots, rel_tol={cfg.rel_tol:g}"
+    )
+    t0 = time.perf_counter()
+    n_done = 0
+    for res in serve(cfg, requests, family):
+        n_done += 1
+        line = res.summary()
+        if args.validate:
+            exact = family.exact(args.d, thetas[res.req_id])
+            rel = abs(res.integral - exact) / max(abs(exact), 1e-300)
+            line += f" true_rel_err={rel:.2e}"
+        print(f"[{n_done}/{len(requests)}] {line}")
+    dt = time.perf_counter() - t0
+    print(
+        f"done: {len(requests)} problems in {dt:.2f}s "
+        f"({len(requests) / dt:.1f} problems/sec)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batch quadrature service: continuous batching for fleets of integrals.
+
+Layers (bottom up):
+
+- :mod:`repro.service.batch_engine` — a vmapped adaptive step over a stacked
+  region store (leading problem axis), per-slot convergence masks, one
+  compiled executable per window rung shared by the whole batch;
+- :mod:`repro.service.scheduler` — the continuous-batching loop: a request
+  queue feeding batch slots, mid-flight admission into slots freed by
+  converged problems, eviction of capacity-saturated slots;
+- :mod:`repro.service.api` — ``integrate_batch`` / ``serve`` entry points.
+"""
+
+from repro.service.api import integrate_batch, serve
+from repro.service.batch_engine import BatchEngine, BatchState
+from repro.service.scheduler import BatchScheduler, QuadRequest, QuadResult
+
+__all__ = [
+    "BatchEngine",
+    "BatchScheduler",
+    "BatchState",
+    "QuadRequest",
+    "QuadResult",
+    "integrate_batch",
+    "serve",
+]

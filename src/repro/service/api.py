@@ -1,0 +1,91 @@
+"""Entry points for the batch quadrature service.
+
+Two shapes of the same engine:
+
+- :func:`integrate_batch` — the *offline* form: hand it a fleet of thetas,
+  get the full list of results back in submission order (a drop-in batched
+  analogue of calling :func:`repro.core.adaptive.integrate` in a loop);
+- :func:`serve` — the *online* form: hand it any iterable (or generator) of
+  :class:`QuadRequest`\\ s and consume :class:`QuadResult`\\ s as they
+  converge.  Requests are pulled lazily, so an unbounded stream
+  backpressures on slot availability — this is the continuous-batching
+  surface a real service would sit behind.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Iterator, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.config import QuadratureConfig
+from repro.core.integrands import ParamIntegrand
+from repro.service.scheduler import BatchScheduler, QuadRequest, QuadResult
+
+
+def _as_theta_list(thetas: Union[Sequence[Any], Any]) -> list[Any]:
+    """Normalise ``thetas`` to a list of per-problem pytrees.
+
+    Accepts either a sequence of theta dicts (one per problem) or a single
+    *stacked* dict whose leaves carry a leading batch axis (the natural
+    output of vectorised theta generation).
+    """
+    if isinstance(thetas, dict):
+        leaves = {k: np.asarray(v) for k, v in thetas.items()}
+        sizes = {v.shape[0] for v in leaves.values()}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"stacked theta leaves disagree on batch size: { {k: v.shape for k, v in leaves.items()} }"
+            )
+        (b,) = sizes
+        return [{k: v[i] for k, v in leaves.items()} for i in range(b)]
+    return list(thetas)
+
+
+def serve(
+    cfg: QuadratureConfig,
+    requests: Iterable[QuadRequest],
+    family: Union[ParamIntegrand, str, None] = None,
+) -> Iterator[QuadResult]:
+    """Stream results for an arbitrary request iterable (convergence order)."""
+    return BatchScheduler(cfg, family).serve(requests)
+
+
+def integrate_batch(
+    cfg: QuadratureConfig,
+    thetas: Union[Sequence[Any], Any],
+    family: Union[ParamIntegrand, str, None] = None,
+    rel_tol: Union[float, Sequence[float], None] = None,
+    abs_tol: Union[float, Sequence[float], None] = None,
+) -> list[QuadResult]:
+    """Integrate a fleet of problems; results in submission order.
+
+    ``thetas`` is a list of theta pytrees (or one stacked pytree with a
+    leading batch axis); ``rel_tol`` / ``abs_tol`` may be scalars applied to
+    every problem, per-problem sequences, or ``None`` for the ``cfg``
+    defaults.  ``family`` defaults to the family named by ``cfg.integrand``
+    (its spec prefix before the first ``:``).
+    """
+    theta_list = _as_theta_list(thetas)
+    n = len(theta_list)
+
+    def per_problem(tol, name) -> list[Optional[float]]:
+        if tol is None or np.ndim(tol) == 0:
+            return [None if tol is None else float(tol)] * n
+        if len(tol) != n:
+            raise ValueError(f"{name} has {len(tol)} entries for {n} problems")
+        return [float(t) for t in tol]
+
+    rels = per_problem(rel_tol, "rel_tol")
+    abss = per_problem(abs_tol, "abs_tol")
+    requests = [
+        QuadRequest(req_id=i, theta=t, rel_tol=r, abs_tol=a)
+        for i, (t, r, a) in enumerate(zip(theta_list, rels, abss))
+    ]
+    results: list[Optional[QuadResult]] = [None] * n
+    for res in serve(cfg, requests, family):
+        results[res.req_id] = res
+    missing = [i for i, r in enumerate(results) if r is None]
+    if missing:  # pragma: no cover - invariant guard
+        raise RuntimeError(f"scheduler dropped requests {missing}")
+    return results

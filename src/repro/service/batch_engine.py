@@ -1,0 +1,324 @@
+"""Batched adaptive quadrature engine: one compiled step for B problems.
+
+The single-problem drivers in :mod:`repro.core.adaptive` solve one integral
+per invocation.  Fleets of *related* integrals ``∫ f(x; theta_k) dx`` over a
+shared domain (parameter sweeps, Bayesian evidence grids, PDF convolutions)
+instead run here: the SoA :class:`~repro.core.region_store.RegionState` gains
+a leading problem axis and the whole adaptive step — windowed rule
+evaluation, classification, split/compact — is ``vmap``-ped across it, so
+the fleet shares one XLA program and the hardware sees one big batch of
+regions instead of B small ones.
+
+Heterogeneous convergence across the fleet is the same load-imbalance
+problem the paper solves across devices; here it is solved across batch
+slots by *continuous batching* (the idiom of the LLM serving engine in
+``repro.serving``): per-slot ``done`` masks turn converged problems into
+pass-throughs, and the scheduler splices a fresh initial partition into a
+freed slot mid-flight (:func:`~repro.core.region_store.write_slot`) without
+recompilation.
+
+Window discipline: the eval window must be a single static shape per
+dispatch, so the engine picks the smallest ladder rung covering the *widest*
+live slot (``lax.switch`` at the top level, each branch the vmapped eval at
+one rung).  By the active-window invariance argument (any window >=
+n_active is exact) every slot gets bit-identical estimates to its own
+serial run at that rung — there is exactly one compiled executable per
+(d, rule, window-rung), shared across the whole batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import region_store
+from repro.core.adaptive import (
+    donate_argnums,
+    eval_ladder,
+    make_advance_step,
+    make_eval_step,
+)
+from repro.core.config import QuadratureConfig
+from repro.core.integrands import ParamIntegrand, get_param
+from repro.core.region_store import RegionState
+from repro.core.rules import make_rule
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "regions",
+        "theta",
+        "rel_tol",
+        "abs_tol",
+        "occupied",
+        "done",
+        "overflow_it",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class BatchState:
+    """B independent problems in lockstep: stacked stores + per-slot masks."""
+
+    regions: RegionState  # every leaf has a leading (B,) axis
+    theta: Any  # family theta pytree, leaves (B, d)
+    rel_tol: jnp.ndarray  # (B,) per-request tolerances
+    abs_tol: jnp.ndarray  # (B,)
+    occupied: jnp.ndarray  # (B,) bool — slot holds an admitted problem
+    done: jnp.ndarray  # (B,) bool — result ready, frozen until released
+    overflow_it: jnp.ndarray  # (B,) int32 — it at first overflow, -1 = never
+
+    @property
+    def n_slots(self) -> int:
+        return self.occupied.shape[0]
+
+
+def _select_slots(mask: jnp.ndarray, new, old):
+    """Per-slot select over a stacked pytree (mask broadcast over trailing dims)."""
+
+    def sel(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+class BatchEngine:
+    """Compiled-step executor for a fixed-shape fleet of one integrand family.
+
+    All problems share ``cfg``'s static shape (d, capacity, rule, domain) and
+    differ only in theta and tolerances — that is what makes the batch a
+    single XLA program.  The scheduler (:mod:`repro.service.scheduler`)
+    drives :meth:`step` from the host, admitting and collecting per slot.
+    """
+
+    def __init__(
+        self, cfg: QuadratureConfig, family: Union[ParamIntegrand, str, None] = None
+    ):
+        cfg = cfg.validate()
+        if cfg.use_kernel:
+            raise ValueError(
+                "the batch engine does not support the Pallas kernel path: "
+                "family integrands close over per-slot theta arrays, which "
+                "pallas_call rejects as captured constants; set "
+                "use_kernel=False (the jnp reference rule vmaps fine)"
+            )
+        if family is None:
+            family = cfg.integrand.partition(":")[0]
+        if isinstance(family, str):
+            family = get_param(family)
+        self.cfg = cfg
+        self.family = family
+        self.n_slots = cfg.batch_slots
+
+        lo = np.asarray(cfg.lo(), np.float64)
+        hi = np.asarray(cfg.hi(), np.float64)
+        self._total_volume = float(np.prod(hi - lo))
+        self._width = hi - lo
+        self._dtype = jnp.dtype(cfg.dtype)
+        # fresh single-slot state spliced into a slot on admit
+        self._fresh_slot = region_store.init_state(
+            cfg.capacity, lo, hi, cfg.resolved_n_init(), self._dtype
+        )
+        # theta template fixes the pytree structure + leaf shapes of the fleet
+        self.theta_template = jax.tree.map(
+            lambda x: np.zeros(np.shape(x), np.float64),
+            family.sample_theta(cfg.d, np.random.default_rng(0)),
+        )
+
+        donate = donate_argnums()
+        self._step = jax.jit(self._make_step(), donate_argnums=donate)
+        self._admit = jax.jit(self._make_admit(), donate_argnums=donate)
+        self._release = jax.jit(self._make_release(), donate_argnums=donate)
+
+    # --- state construction --------------------------------------------------
+
+    def init(self) -> BatchState:
+        """All slots empty; admit problems before stepping."""
+        cfg = self.cfg
+        B = self.n_slots
+        return BatchState(
+            regions=region_store.stacked_empty_state(
+                B, cfg.capacity, cfg.d, self._dtype
+            ),
+            theta=jax.tree.map(
+                lambda x: jnp.zeros((B,) + x.shape, self._dtype),
+                self.theta_template,
+            ),
+            rel_tol=jnp.full((B,), cfg.rel_tol, self._dtype),
+            abs_tol=jnp.full((B,), cfg.abs_tol, self._dtype),
+            occupied=jnp.zeros((B,), bool),
+            done=jnp.zeros((B,), bool),
+            overflow_it=jnp.full((B,), -1, jnp.int32),
+        )
+
+    # --- jitted slot operations ----------------------------------------------
+
+    def _make_admit(self):
+        fresh = self._fresh_slot
+
+        def admit(state: BatchState, slot, theta, rel_tol, abs_tol) -> BatchState:
+            return dataclasses.replace(
+                state,
+                regions=region_store.write_slot(state.regions, slot, fresh),
+                theta=jax.tree.map(
+                    lambda dst, src: dst.at[slot].set(src), state.theta, theta
+                ),
+                rel_tol=state.rel_tol.at[slot].set(rel_tol),
+                abs_tol=state.abs_tol.at[slot].set(abs_tol),
+                occupied=state.occupied.at[slot].set(True),
+                done=state.done.at[slot].set(False),
+                overflow_it=state.overflow_it.at[slot].set(-1),
+            )
+
+        return admit
+
+    def _make_release(self):
+        def release(state: BatchState, slot) -> BatchState:
+            return dataclasses.replace(
+                state,
+                occupied=state.occupied.at[slot].set(False),
+                done=state.done.at[slot].set(False),
+            )
+
+        return release
+
+    def admit(
+        self,
+        state: BatchState,
+        slot: int,
+        theta,
+        rel_tol: Optional[float] = None,
+        abs_tol: Optional[float] = None,
+    ) -> BatchState:
+        """Write a fresh initial partition + theta into ``slot`` (mid-flight safe)."""
+        self._check_slot(slot)
+        got = jax.tree.map(lambda x: np.shape(x), theta)
+        want = jax.tree.map(lambda x: np.shape(x), self.theta_template)
+        if got != want:
+            raise ValueError(
+                f"theta shape mismatch for family {self.family.name!r}: "
+                f"got {got}, want {want}"
+            )
+        return self._admit(
+            state,
+            jnp.asarray(slot, jnp.int32),
+            jax.tree.map(lambda x: jnp.asarray(x, self._dtype), theta),
+            jnp.asarray(self.cfg.rel_tol if rel_tol is None else rel_tol, self._dtype),
+            jnp.asarray(self.cfg.abs_tol if abs_tol is None else abs_tol, self._dtype),
+        )
+
+    def release(self, state: BatchState, slot: int) -> BatchState:
+        """Free a collected slot (its store stays stale until the next admit)."""
+        self._check_slot(slot)
+        return self._release(state, jnp.asarray(slot, jnp.int32))
+
+    def _check_slot(self, slot: int) -> None:
+        # JAX drops out-of-bounds scatter updates, so a bad index would
+        # otherwise no-op silently and strand the request.
+        if not 0 <= int(slot) < self.n_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.n_slots})")
+
+    # --- the batched adaptive step -------------------------------------------
+
+    def _make_step(self):
+        cfg = self.cfg
+        family = self.family
+        total_volume = self._total_volume
+        ladder = eval_ladder(cfg)
+        rungs = jnp.asarray(ladder, jnp.int32)
+
+        def eval_branch(window: int):
+            def eval_one(regions: RegionState, theta) -> RegionState:
+                rule = make_rule(cfg, lambda x: family.fn(x, theta))
+                return make_eval_step(cfg, rule, window=window)(regions)
+
+            return jax.vmap(eval_one)
+
+        branches = [eval_branch(w) for w in ladder]
+
+        # the serial drivers' advance, vmapped with per-slot traced tolerances
+        advance = jax.vmap(make_advance_step(cfg, total_volume, self._width))
+
+        def step(state: BatchState):
+            live = state.occupied & ~state.done
+            counts = jnp.sum(state.regions.active, axis=1).astype(jnp.int32)
+            widest = jnp.max(jnp.where(live, counts, 0))
+            ix = region_store.rung_index(rungs, widest)
+
+            evald = jax.lax.switch(ix, branches, state.regions, state.theta)
+            regions = _select_slots(live, evald, state.regions)
+
+            integral, error = jax.vmap(lambda r: r.global_estimates())(regions)
+            budget = jnp.maximum(state.abs_tol, jnp.abs(integral) * state.rel_tol)
+            n_active = jnp.sum(regions.active, axis=1).astype(jnp.int32)
+            converged = error <= budget
+            # Capacity pressure is not instantly terminal: the serial driver
+            # grinds past overflow and often converges, so an overflowed slot
+            # keeps refining for ``evict_patience`` further iterations (exact
+            # serial parity for transient saturation) before being evicted.
+            overflow_it = jnp.where(
+                regions.overflowed & (state.overflow_it < 0),
+                regions.it,
+                state.overflow_it,
+            )
+            evicted = regions.overflowed & (
+                regions.it - overflow_it >= cfg.evict_patience
+            )
+            # The serial driver runs exactly max_iters eval sweeps: post-eval
+            # ``it == max_iters - 1`` means this sweep was the last one, so
+            # the slot freezes NOW — checking ``it >= max_iters`` instead
+            # would eval the final advance's children one extra time and
+            # break bit-parity with `integrate` on the max_iters path.
+            capped = regions.it >= cfg.max_iters - 1
+            terminal = converged | (n_active == 0) | capped | evicted
+            done = state.done | (live & terminal)
+
+            advanced = advance(regions, budget, state.rel_tol)
+            regions = _select_slots(state.occupied & ~done, advanced, regions)
+            # Serial parity on the counter too: after capturing its final
+            # metrics the serial driver still runs (and counts) one advance
+            # before the loop exhausts.  The frozen slot skips the splitting
+            # (its estimates must stay collectable) but mirrors the counter.
+            bump = live & capped & ~converged & (n_active > 0)
+            regions = dataclasses.replace(
+                regions, it=regions.it + bump.astype(regions.it.dtype)
+            )
+
+            metrics = {
+                "integral": integral,
+                "error": error,
+                "n_active": n_active,
+                "it": regions.it,
+                "n_evals": regions.n_evals,
+                "overflowed": regions.overflowed,
+                "converged": converged,
+                "done": done,
+                "occupied": state.occupied,
+                "window": rungs[ix],
+            }
+            return (
+                dataclasses.replace(
+                    state, regions=regions, done=done, overflow_it=overflow_it
+                ),
+                metrics,
+            )
+
+        return step
+
+    def step(self, state: BatchState):
+        """One fused iteration for every live slot; returns (state, metrics).
+
+        ``metrics`` holds per-slot device arrays: ``integral``, ``error``,
+        ``n_active``, ``it``, ``n_evals``, ``overflowed``, ``converged``,
+        ``done``, ``occupied`` plus the scalar eval ``window`` used.  Slots
+        whose ``done`` flips on are frozen (no further advance) until the
+        scheduler collects and releases them.
+        """
+        return self._step(state)

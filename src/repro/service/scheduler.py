@@ -1,0 +1,153 @@
+"""Continuous-batching scheduler for the batch quadrature engine.
+
+The host-side loop that turns the fixed-shape :class:`BatchEngine` into a
+service: a FIFO request queue feeds ``cfg.batch_slots`` slots; every
+``cfg.admit_every`` iterations freed slots are refilled from the queue
+(mid-flight — the other slots keep refining through the same compiled step),
+and finished slots are collected and yielded as :class:`QuadResult`\\ s as
+soon as their ``done`` flag flips, in convergence order rather than
+submission order.
+
+Termination taxonomy per request (mirrors ``AdaptiveResult.status``):
+
+- ``converged`` — error estimate under the request's budget;
+- ``capacity`` — the slot's region store saturated (``overflowed``) and
+  stayed unconverged for ``cfg.evict_patience`` further iterations: the
+  engine freezes it and the scheduler *evicts* it with its best-effort
+  estimate so the slot can serve the rest of the queue instead of grinding
+  a hopeless problem (transient saturation that converges within the grace
+  period keeps exact parity with the serial driver);
+- ``no_active`` / ``max_iters`` — degenerate population / iteration cap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Iterator, Optional, Union
+
+import numpy as np
+
+from repro.core.adaptive import result_status
+from repro.core.config import QuadratureConfig
+from repro.core.integrands import ParamIntegrand
+from repro.service.batch_engine import BatchEngine, BatchState
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadRequest:
+    """One integration problem: a theta of the engine's family + tolerances."""
+
+    req_id: int
+    theta: Any  # pytree matching the family's theta_fields, leaves (d,)
+    rel_tol: Optional[float] = None  # None -> cfg default
+    abs_tol: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadResult:
+    """Terminal state of one request (statuses as in AdaptiveResult)."""
+
+    req_id: int
+    integral: float
+    error: float
+    status: str  # converged | capacity | no_active | max_iters
+    iterations: int  # per-slot adaptive iterations spent on this problem
+    n_evals: float  # integrand evaluations spent on this problem
+    admitted_at: int  # scheduler iteration at which the slot was filled
+    finished_at: int  # scheduler iteration at which done flipped on
+
+    def summary(self) -> str:
+        return (
+            f"req={self.req_id} I={self.integral:.15e} eps={self.error:.3e} "
+            f"[{self.status}] iters={self.iterations} evals={self.n_evals:.3g}"
+        )
+
+
+class BatchScheduler:
+    """Drives a :class:`BatchEngine` over an arbitrary stream of requests."""
+
+    def __init__(
+        self,
+        cfg: QuadratureConfig,
+        family: Union[ParamIntegrand, str, None] = None,
+        engine: Optional[BatchEngine] = None,
+    ):
+        self.engine = engine if engine is not None else BatchEngine(cfg, family)
+        self.cfg = self.engine.cfg
+
+    def serve(self, requests: Iterable[QuadRequest]) -> Iterator[QuadResult]:
+        """Run the fleet to completion, yielding results as slots converge.
+
+        ``requests`` may be any iterable (including a generator — it is only
+        pulled from when a slot is free, so an unbounded stream backpressures
+        naturally).  Every request yields exactly one result.
+        """
+        engine = self.engine
+        B = engine.n_slots
+        pending = iter(requests)
+        slot_req: list[Optional[QuadRequest]] = [None] * B
+        slot_admitted = np.zeros(B, np.int64)
+        state = engine.init()
+        it = 0
+
+        def pull() -> Optional[QuadRequest]:
+            return next(pending, None)
+
+        def admit_free_slots(state: BatchState) -> BatchState:
+            for slot in range(B):
+                if slot_req[slot] is not None:
+                    continue
+                req = pull()
+                if req is None:
+                    break
+                state = engine.admit(
+                    state, slot, req.theta, req.rel_tol, req.abs_tol
+                )
+                slot_req[slot] = req
+                slot_admitted[slot] = it
+            return state
+
+        state = admit_free_slots(state)
+        while any(r is not None for r in slot_req):
+            state, metrics = engine.step(state)
+            it += 1
+            done = np.asarray(metrics["done"])
+            occupied = np.asarray(metrics["occupied"])
+            if np.any(done & occupied):
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                for slot in range(B):
+                    if not (done[slot] and occupied[slot]):
+                        continue
+                    req = slot_req[slot]
+                    yield QuadResult(
+                        req_id=req.req_id,
+                        integral=float(metrics["integral"][slot]),
+                        error=float(metrics["error"][slot]),
+                        status=result_status(
+                            bool(metrics["converged"][slot]),
+                            int(metrics["n_active"][slot]),
+                            int(metrics["it"][slot]),
+                            self.cfg,
+                            bool(metrics["overflowed"][slot]),
+                        ),
+                        iterations=int(metrics["it"][slot]),
+                        n_evals=float(metrics["n_evals"][slot]),
+                        admitted_at=int(slot_admitted[slot]),
+                        finished_at=it,
+                    )
+                    state = engine.release(state, slot)
+                    slot_req[slot] = None
+            # Admit on the configured cadence — but never let the fleet go
+            # idle with work still queued: if every slot just drained we
+            # admit immediately rather than spinning (or exiting) until the
+            # next admit tick.
+            if it % self.cfg.admit_every == 0 or all(
+                r is None for r in slot_req
+            ):
+                state = admit_free_slots(state)
+        # drain: nothing in flight, so nothing may remain unadmitted
+        leftover = pull()
+        if leftover is not None:  # pragma: no cover - invariant guard
+            raise RuntimeError(
+                f"scheduler exited with queued requests (req_id={leftover.req_id})"
+            )

@@ -1,0 +1,76 @@
+"""Unit tests for the static ring-shift redistribution schedule."""
+
+import pytest
+
+from repro.core.redistribution import make_schedule
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and x & (x - 1) == 0
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 5, 6, 7, 8, 12, 16, 100, 1000])
+def test_schedule_shifts_unique_and_in_range(n):
+    sched = make_schedule(n)
+    assert len(set(sched)) == len(sched), "duplicate shift"
+    for s in sched:
+        assert 1 <= s < n, f"shift {s} out of ring range for {n} devices"
+
+
+def test_single_device_has_empty_schedule():
+    assert make_schedule(1) == ()
+    assert make_schedule(0) == ()
+
+
+def test_two_and_three_devices():
+    assert make_schedule(2) == (1,)
+    assert make_schedule(3) == (1, 2)
+
+
+def test_powers_of_two_come_first():
+    """ICI-torus-friendly ordering: every power-of-two stride < n precedes
+    every non-power-of-two stride (within the max_len budget)."""
+    for n in (4, 6, 8, 12, 16, 32, 100):
+        sched = make_schedule(n)
+        seen_non_pow2 = False
+        for s in sched:
+            if _is_pow2(s):
+                assert not seen_non_pow2, f"pow2 shift {s} after non-pow2 in {sched}"
+            else:
+                seen_non_pow2 = True
+        # the pow2 prefix is complete: all powers of two below n (up to the
+        # length cap) are present
+        pow2_in = [s for s in sched if _is_pow2(s)]
+        expected = []
+        s = 1
+        while s < n and len(expected) < 8:
+            expected.append(s)
+            s <<= 1
+        assert pow2_in == expected
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 7, 8, 9])
+def test_small_rings_cover_every_distance(n):
+    """With few devices the schedule should reach every ring distance, so
+    any imbalance pattern is eventually smoothed."""
+    sched = make_schedule(n)
+    assert set(sched) == set(range(1, n))
+
+
+def test_max_len_caps_schedule():
+    for n in (1 << 10, 1 << 13):
+        sched = make_schedule(n)
+        assert len(sched) == 8  # default max_len
+        assert make_schedule(n, max_len=4) == sched[:4]
+
+
+def test_huge_ring_beyond_pow2_budget():
+    """n > 2^max_len: the schedule is all powers of two (the budget is spent
+    before any odd stride fits)."""
+    sched = make_schedule(1 << 12, max_len=8)
+    assert sched == (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def test_non_power_of_two_fill():
+    # 6 devices: pow2 strides 1,2,4 then odd strides 3,5
+    assert make_schedule(6) == (1, 2, 4, 3, 5)

@@ -1,0 +1,280 @@
+"""Batch quadrature service: engine parity, continuous batching, registry."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from repro.core import QuadratureConfig, integrate
+from repro.core.integrands import bind, from_spec, get, get_param
+from repro.service import (
+    BatchEngine,
+    BatchScheduler,
+    QuadRequest,
+    integrate_batch,
+    serve,
+)
+
+FAMILY = get_param("genz_gaussian")
+D = 3
+
+
+def _cfg(**kw):
+    base = dict(
+        d=D,
+        integrand="genz_gaussian",
+        rel_tol=1e-6,
+        capacity=1 << 11,
+        batch_slots=4,
+        max_iters=120,
+    )
+    base.update(kw)
+    return QuadratureConfig(**base)
+
+
+def _thetas(n, seed=0, d=D):
+    rng = np.random.default_rng(seed)
+    return [FAMILY.sample_theta(d, rng) for _ in range(n)]
+
+
+# --- parity: the acceptance-criterion test -----------------------------------
+
+
+def test_batch_matches_serial_and_exact_with_midflight_admission():
+    """Every QuadResult matches the serial `integrate` run for the same theta
+    and the analytic exact value within its requested tolerance — including
+    slots admitted mid-flight after another slot converged."""
+    cfg = _cfg()
+    thetas = _thetas(10)
+    results = integrate_batch(cfg, thetas)
+    assert [r.req_id for r in results] == list(range(10))
+    admitted = {r.admitted_at for r in results}
+    assert len(admitted) > 1, "fleet fit in one wave; no mid-flight admission"
+    for theta, res in zip(thetas, results):
+        assert res.status == "converged"
+        exact = FAMILY.exact(D, theta)
+        serial = integrate(cfg, bind(FAMILY, theta).fn)
+        # engine and serial driver share eval/classify/split code on the same
+        # window ladder → identical refinement trajectories, not just close
+        assert res.integral == pytest.approx(serial.integral, rel=1e-13, abs=0)
+        assert res.iterations == serial.iterations
+        budget = max(cfg.abs_tol, abs(exact) * cfg.rel_tol)
+        # claimed error bound is satisfied and honest w.r.t. the true error
+        assert res.error <= budget
+        assert abs(res.integral - exact) <= 10 * max(res.error, budget)
+
+
+def test_midflight_slot_is_bitwise_identical_to_serial():
+    """A slot refilled mid-flight reuses a store left stale by the previous
+    occupant; the fresh write must make its trajectory indistinguishable
+    from a cold start."""
+    cfg = _cfg(batch_slots=2)
+    thetas = _thetas(5, seed=7)
+    results = integrate_batch(cfg, thetas)
+    late = [r for r in results if r.admitted_at > 0]
+    assert late, "no slot was refilled mid-flight"
+    for res in late:
+        serial = integrate(cfg, bind(FAMILY, thetas[res.req_id]).fn)
+        assert res.integral == serial.integral
+        assert res.iterations == serial.iterations
+
+
+def test_max_iters_parity_with_serial():
+    """The iteration cap must fire after the same number of eval sweeps as
+    the serial driver: same integral, error, eval count, and iteration
+    count (regression: the engine used to run one extra sweep)."""
+    cfg = _cfg(batch_slots=2, max_iters=6, rel_tol=1e-14)
+    theta = _thetas(1, seed=29)[0]
+    (res,) = integrate_batch(cfg, [theta])
+    serial = integrate(cfg, bind(FAMILY, theta).fn)
+    assert serial.status == "max_iters"  # guard: the cap path is exercised
+    assert res.status == "max_iters"
+    assert res.integral == serial.integral
+    assert res.error == serial.error
+    assert res.n_evals == serial.n_evals
+    assert res.iterations == serial.iterations
+
+
+# --- tolerances, ordering, input shapes --------------------------------------
+
+
+def test_per_request_tolerances():
+    cfg = _cfg(batch_slots=2)
+    theta = _thetas(1, seed=3)[0]
+    loose, tight = integrate_batch(
+        cfg, [theta, theta], rel_tol=[1e-3, 1e-6]
+    )
+    assert loose.status == tight.status == "converged"
+    assert loose.iterations < tight.iterations
+    assert loose.n_evals < tight.n_evals
+    exact = FAMILY.exact(D, theta)
+    assert abs(tight.integral - exact) <= abs(exact) * 1e-4
+
+
+def test_per_request_tolerance_parity_aggressive_classifier():
+    """The aggressive classifier's local-prune term uses rel_tol directly,
+    so it must see the request's tolerance, not cfg's (regression: it used
+    to read cfg.rel_tol and silently change the refinement trajectory)."""
+    import dataclasses as dc
+
+    cfg = _cfg(batch_slots=2, classifier="aggressive", rel_tol=1e-8)
+    theta = _thetas(1, seed=3)[0]
+    (res,) = integrate_batch(cfg, [theta], rel_tol=1e-3)
+    serial = integrate(dc.replace(cfg, rel_tol=1e-3), bind(FAMILY, theta).fn)
+    assert res.integral == serial.integral
+    assert res.n_evals == serial.n_evals
+    assert res.iterations == serial.iterations
+
+
+def test_engine_rejects_kernel_path():
+    with pytest.raises(ValueError, match="kernel"):
+        BatchEngine(_cfg(use_kernel=True))
+    with pytest.raises(ValueError, match="kernel"):
+        integrate(
+            QuadratureConfig(
+                d=2, integrand="genz_gaussian:5,5:0.3,0.7", use_kernel=True
+            )
+        )
+
+
+def test_stacked_theta_pytree():
+    cfg = _cfg(batch_slots=3)
+    thetas = _thetas(3, seed=5)
+    stacked = {
+        k: np.stack([t[k] for t in thetas]) for k in FAMILY.theta_fields
+    }
+    a = integrate_batch(cfg, thetas)
+    b = integrate_batch(cfg, stacked)
+    assert [r.integral for r in a] == [r.integral for r in b]
+
+
+def test_serve_streams_in_convergence_order():
+    cfg = _cfg(batch_slots=4, rel_tol=1e-5)
+    thetas = _thetas(6, seed=11)
+    reqs = (QuadRequest(req_id=i, theta=t) for i, t in enumerate(thetas))
+    seen = []
+    for res in serve(cfg, reqs, FAMILY):  # generator input: lazy pull
+        seen.append(res)
+        assert res.finished_at >= res.admitted_at
+    assert sorted(r.req_id for r in seen) == list(range(6))
+    assert [r.finished_at for r in seen] == sorted(r.finished_at for r in seen)
+
+
+def test_admit_every_batches_admissions():
+    # request 0 is tight enough to keep one slot busy for the whole run, so
+    # while it is in flight every admission must land on the admit_every
+    # cadence (once the fleet fully drains, immediate refill is allowed)
+    cfg = _cfg(batch_slots=2, admit_every=5, rel_tol=1e-3)
+    thetas = _thetas(6, seed=13)
+    results = integrate_batch(cfg, thetas, rel_tol=[1e-6] + [1e-3] * 5)
+    assert all(r.status == "converged" for r in results)
+    anchor_end = results[0].finished_at
+    for r in results[1:]:
+        if 0 < r.admitted_at <= anchor_end:
+            assert r.admitted_at % 5 == 0, (r.req_id, r.admitted_at)
+    assert any(
+        0 < r.admitted_at <= anchor_end for r in results[1:]
+    ), "no admission happened while the anchor request was in flight"
+
+
+# --- eviction: capacity-overflow slots don't wedge the fleet -----------------
+
+
+def test_capacity_overflow_is_evicted_and_queue_drains():
+    # request 0 asks for 1e-8 from a 128-slot store — the population
+    # saturates before converging, so the engine freezes the slot and the
+    # scheduler evicts it with status "capacity" while the easy requests
+    # keep flowing through the freed capacity
+    cfg = _cfg(capacity=1 << 7, batch_slots=2, rel_tol=1e-4, max_iters=80)
+    hard = _thetas(1, seed=3)[0]
+    easy = _thetas(4, seed=17)
+    results = integrate_batch(
+        cfg, [hard] + easy, rel_tol=[1e-8] + [1e-4] * 4
+    )
+    assert results[0].status == "capacity"
+    assert all(r.status == "converged" for r in results[1:])
+    # best-effort estimate at eviction time is still in the right ballpark
+    exact = FAMILY.exact(D, hard)
+    assert abs(results[0].integral - exact) <= 0.1 * abs(exact)
+
+
+# --- engine-level unit tests -------------------------------------------------
+
+
+def test_engine_theta_shape_validation():
+    eng = BatchEngine(_cfg())
+    state = eng.init()
+    with pytest.raises(ValueError, match="theta shape mismatch"):
+        eng.admit(state, 0, {"a": np.zeros(D + 1), "u": np.zeros(D + 1)})
+
+
+def test_engine_step_on_empty_fleet_is_noop():
+    eng = BatchEngine(_cfg())
+    state = eng.init()
+    state, metrics = eng.step(state)
+    assert not bool(np.any(np.asarray(metrics["done"])))
+    assert not bool(np.any(np.asarray(metrics["occupied"])))
+    assert int(np.asarray(metrics["n_active"]).sum()) == 0
+
+
+def test_scheduler_empty_request_stream():
+    assert list(BatchScheduler(_cfg()).serve([])) == []
+
+
+# --- parameterized-integrand registry (satellite) ----------------------------
+
+
+def test_from_spec_round_trip():
+    spec = "genz_gaussian:5,5:0.3,0.7"
+    integrand = from_spec(spec)
+    ref = FAMILY.exact(2, {"a": np.array([5.0, 5.0]), "u": np.array([0.3, 0.7])})
+    assert integrand.exact(2) == pytest.approx(ref, rel=1e-15)
+    assert get(spec).exact(2) == integrand.exact(2)  # reachable through get()
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [
+        "genz_gaussian",  # missing theta groups
+        "genz_gaussian:1,2",  # one group, needs two
+        "genz_gaussian:1,2:0.5",  # unequal group lengths
+        "genz_gaussian:a,b:c,d",  # non-numeric
+        "nosuchfamily:1,2",
+    ],
+)
+def test_from_spec_rejects_malformed(spec):
+    with pytest.raises((KeyError, ValueError)):
+        from_spec(spec)
+
+
+def test_spec_theta_length_must_match_d():
+    """A spec whose theta length disagrees with d must raise, not silently
+    broadcast in the integrand while exact() truncates (regression)."""
+    integrand = from_spec("monomial:2")  # length-1 theta
+    with pytest.raises(ValueError, match="length 1"):
+        integrand.exact(3)
+    cfg = QuadratureConfig(d=3, integrand="monomial:2", capacity=1 << 10)
+    with pytest.raises(ValueError, match="theta leaf"):
+        integrate(cfg)
+
+
+def test_config_can_name_family_spec():
+    """QuadratureConfig.integrand can carry a family spec end to end."""
+    cfg = QuadratureConfig(
+        d=2, integrand="monomial:2,3", rel_tol=1e-10, capacity=1 << 10
+    )
+    res = integrate(cfg)
+    assert res.integral == pytest.approx(1.0 / 3.0 / 4.0, rel=1e-9)
+
+
+@pytest.mark.parametrize("name", ["genz_gaussian", "genz_product_peak", "monomial"])
+def test_family_exact_against_serial(name):
+    fam = get_param(name)
+    theta = fam.sample_theta(2, np.random.default_rng(23))
+    cfg = QuadratureConfig(d=2, rel_tol=1e-8, capacity=1 << 11)
+    res = integrate(cfg, bind(fam, theta).fn)
+    exact = fam.exact(2, theta)
+    assert res.status == "converged"
+    assert abs(res.integral - exact) <= max(abs(exact) * 1e-6, 1e-12)
