@@ -28,6 +28,7 @@ def main() -> None:
         fig4a_scaling,
         fig4b_idle,
         kernel_bench,
+        sharded_service,
     )
 
     modules = {
@@ -40,6 +41,7 @@ def main() -> None:
         "kernel": kernel_bench,
         "eval_window": eval_window,
         "batch_throughput": batch_throughput,
+        "sharded_service": sharded_service,
     }
     if args.only:
         keep = set(args.only.split(","))

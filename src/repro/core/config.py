@@ -56,6 +56,21 @@ class QuadratureConfig:
     # keeps parity for transiently-saturated problems while still freeing
     # the slot from hopeless ones long before max_iters.
     evict_patience: int = 16
+    # --- sharded service mesh + problem-level rebalancing ---------------------
+    # The batch service shards its leading problem axis over a device mesh:
+    # each device owns a contiguous block of batch_slots / n_devices slots and
+    # runs the vmapped windowed step locally.  ``service_devices`` picks the
+    # mesh size (1 = single-device legacy path, 0 = every visible device);
+    # an explicit mesh/devices argument to BatchEngine overrides it.
+    service_devices: int = 1
+    # When a device's live slots drain (converged problems collected, queue
+    # dry), whole *problems* migrate from its cyclic ring partner — the same
+    # static-schedule ppermute pairing ``redistribution.redistribute`` uses
+    # for regions, lifted to the problem level.  "off" disables migration;
+    # ``rebalance_cap`` bounds problems moved per pair per iteration (the
+    # payload is a full slot: region store + theta + tolerances).
+    rebalance: str = "ring"
+    rebalance_cap: int = 1
     # --- distributed ---------------------------------------------------------
     message_cap: int = 512  # max regions per transfer (paper default)
     init_regions_per_device: int = 8  # paper: 8 subdomains per rank at startup
@@ -119,6 +134,12 @@ class QuadratureConfig:
             raise ValueError("admit_every must be >= 1")
         if self.evict_patience < 0:
             raise ValueError("evict_patience must be >= 0")
+        if self.service_devices < 0:
+            raise ValueError("service_devices must be >= 0 (0 = all devices)")
+        if self.rebalance not in ("ring", "off"):
+            raise ValueError(f"unknown rebalance policy {self.rebalance!r}")
+        if self.rebalance_cap < 1:
+            raise ValueError("rebalance_cap must be >= 1")
         if len(self.domain_lo) not in (0, self.d):
             raise ValueError("domain_lo must be empty or length d")
         if len(self.domain_hi) not in (0, self.d):

@@ -68,10 +68,52 @@ def make_schedule(n_devices: int, max_len: int = 8) -> tuple[int, ...]:
     return tuple(shifts)
 
 
-def _ring_perms(n: int, shift: int):
+def ring_perms(n: int, shift: int) -> tuple[list, list]:
+    """The two ppermute index lists of one cyclic round at ring distance
+    ``shift``: ``down`` routes rank ``i``'s data to ``i - shift`` (so every
+    rank sees its downstream partner ``i + shift``), ``up`` routes to
+    ``i + shift`` (payload direction: donor ``i`` feeds ``i + shift``).
+
+    Shared by region-level :func:`redistribute` and the batch service's
+    problem-level rebalancer — both implement the paper's cyclic round-robin
+    pairing, at different granularities.
+    """
     down = [(i, (i - shift) % n) for i in range(n)]  # i's stats -> upstream
     up = [(i, (i + shift) % n) for i in range(n)]  # payload / stats downstream
     return down, up
+
+
+_ring_perms = ring_perms  # backward-compatible private alias
+
+
+def exchange_pair_stats(
+    stats: jnp.ndarray, axis_name: str, n_devices: int, shift: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Phase-1 stats swap of a cyclic round (see module docstring).
+
+    Returns ``(down_stats, up_stats)``: on rank ``i``, ``down_stats`` is the
+    stats vector of its receiver ``i + shift`` and ``up_stats`` that of its
+    donor ``i - shift`` — both sides of a pair can therefore agree on the
+    transfer size from the same four numbers without a second round trip.
+    """
+    down, up = ring_perms(n_devices, shift)
+    return (
+        jax.lax.ppermute(stats, axis_name, down),
+        jax.lax.ppermute(stats, axis_name, up),
+    )
+
+
+def dispatch_cyclic(schedule: Sequence[int], t, make_round, *operands):
+    """Run round ``t`` of a static cyclic schedule via ``lax.switch``.
+
+    XLA SPMD collectives need compile-time communication patterns, so every
+    shift in ``schedule`` is traced into its own branch (``make_round(shift)``
+    returns the round body) and the iteration counter picks the branch at run
+    time.  This is the pairing discipline shared by region redistribution and
+    the batch service's problem migration.
+    """
+    branches = [make_round(s) for s in schedule]
+    return jax.lax.switch(jnp.mod(t, len(schedule)), branches, *operands)
 
 
 def redistribute(
@@ -102,12 +144,13 @@ def redistribute(
     stats = jnp.stack([n_rows, free, surplus, deficit])
 
     def round_fn(shift: int):
-        perm_down, perm_up = _ring_perms(n_devices, shift)
+        _, perm_up = ring_perms(n_devices, shift)
 
         def fn(state: RegionState) -> RegionState:
             # --- phase 1: stats both ways ---------------------------------
-            down_stats = jax.lax.ppermute(stats, axis_name, perm_down)
-            up_stats = jax.lax.ppermute(stats, axis_name, perm_up)
+            down_stats, up_stats = exchange_pair_stats(
+                stats, axis_name, n_devices, shift
+            )
             _, down_free, _, down_deficit = down_stats
             _, _, up_surplus, _ = up_stats
 
@@ -157,9 +200,7 @@ def redistribute(
 
         return fn
 
-    branches = [round_fn(s) for s in schedule]
-    s_idx = jnp.mod(state.it, len(schedule))
-    return jax.lax.switch(s_idx, branches, state)
+    return dispatch_cyclic(schedule, state.it, round_fn, state)
 
 
 def balance_stats(n_rows: jnp.ndarray, axis_name: str, n_devices: int):

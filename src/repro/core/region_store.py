@@ -170,14 +170,20 @@ def stacked_empty_state(n: int, capacity: int, d: int, dtype) -> RegionState:
     return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), one)
 
 
-def write_slot(stacked: RegionState, slot, single: RegionState) -> RegionState:
+def write_slot(
+    stacked: RegionState, slot, single: RegionState, mode: str | None = None
+) -> RegionState:
     """Overwrite slice ``slot`` of a stacked store with a single-store state.
 
     Jit-safe with a traced ``slot`` index — the batch service uses this to
     splice a fresh initial partition into a slot freed by a converged
-    problem without recompiling per slot.
+    problem without recompiling per slot.  ``mode`` is forwarded to the
+    scatter (the sharded service writes with ``mode="drop"`` and an
+    out-of-bounds index on every device but the slot's owner).
     """
-    return jax.tree.map(lambda dst, src: dst.at[slot].set(src), stacked, single)
+    return jax.tree.map(
+        lambda dst, src: dst.at[slot].set(src, mode=mode), stacked, single
+    )
 
 
 def window_ladder(capacity: int, min_window: int = 256) -> tuple[int, ...]:

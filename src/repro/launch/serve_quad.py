@@ -3,6 +3,9 @@
 Serve 64 random Genz-Gaussian problems through 16 batch slots:
   PYTHONPATH=src python -m repro.launch.serve_quad --family genz_gaussian \
       --d 3 --n-requests 64 --batch-slots 16
+Shard the fleet across 4 devices with cyclic problem rebalancing:
+  PYTHONPATH=src python -m repro.launch.serve_quad --d 3 --n-requests 64 \
+      --batch-slots 16 --devices 4 --rebalance ring
 Explicit problems (one family spec per --request, see integrands.from_spec):
   PYTHONPATH=src python -m repro.launch.serve_quad --d 2 \
       --request genz_gaussian:5,5:0.3,0.7 --request genz_gaussian:8,2:0.5,0.5
@@ -33,6 +36,25 @@ def main() -> None:
     ap.add_argument("--admit-every", type=int, default=1)
     ap.add_argument("--eval-window-min", type=int, default=256)
     ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=1,
+        help="mesh size the slot axis is sharded over (0 = all visible devices)",
+    )
+    ap.add_argument(
+        "--rebalance",
+        choices=("ring", "off"),
+        default="ring",
+        help="cyclic problem migration between ring partners when a device drains",
+    )
+    ap.add_argument(
+        "--max-state-bytes",
+        type=int,
+        default=2 << 30,
+        help="refuse fleets whose stacked region store exceeds this many bytes",
+    )
     ap.add_argument(
         "--validate", action="store_true", help="print true error vs analytic exact"
     )
@@ -46,6 +68,7 @@ def main() -> None:
     from repro.core import QuadratureConfig
     from repro.core.integrands import get_param, parse_spec
     from repro.service import QuadRequest, serve
+    from repro.service.batch_engine import estimate_state_bytes
 
     family = get_param(args.family)
     cfg = QuadratureConfig(
@@ -57,7 +80,37 @@ def main() -> None:
         admit_every=args.admit_every,
         eval_window_min=args.eval_window_min,
         max_iters=args.max_iters,
+        sync_every=args.sync_every,
+        service_devices=args.devices,
+        rebalance=args.rebalance,
     )
+
+    # Fail fast on fleets the region store cannot accommodate: the stacked
+    # store allocates batch_slots x capacity regions up front, so an oversized
+    # --batch-slots would otherwise die deep inside XLA allocation (or swap
+    # the host to death) instead of telling the operator what to change.
+    need = estimate_state_bytes(cfg, family)
+    if need > args.max_state_bytes:
+        raise SystemExit(
+            f"--batch-slots {args.batch_slots} x --capacity {args.capacity} "
+            f"needs ~{need / 2**30:.2f} GiB of region-store state, over the "
+            f"{args.max_state_bytes / 2**30:.2f} GiB limit; lower "
+            "--batch-slots or --capacity (or raise --max-state-bytes if the "
+            "hardware really has the memory)"
+        )
+    n_devices = len(jax.devices()) if args.devices == 0 else args.devices
+    if n_devices > len(jax.devices()):
+        raise SystemExit(
+            f"--devices {args.devices} but only {len(jax.devices())} devices "
+            "are visible (set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "to emulate a mesh on CPU)"
+        )
+    if args.batch_slots % n_devices:
+        raise SystemExit(
+            f"--batch-slots {args.batch_slots} must be a multiple of "
+            f"--devices ({n_devices}): each device owns a contiguous block "
+            "of batch_slots / devices slots"
+        )
 
     if args.request:
         thetas = []
@@ -76,7 +129,8 @@ def main() -> None:
     requests = [QuadRequest(req_id=i, theta=t) for i, t in enumerate(thetas)]
     print(
         f"serving {len(requests)} x {family.name} (d={args.d}) through "
-        f"{cfg.batch_slots} slots, rel_tol={cfg.rel_tol:g}"
+        f"{cfg.batch_slots} slots on {n_devices} device(s) "
+        f"(rebalance={cfg.rebalance}), rel_tol={cfg.rel_tol:g}"
     )
     t0 = time.perf_counter()
     n_done = 0

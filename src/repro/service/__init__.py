@@ -1,14 +1,23 @@
-"""Batch quadrature service: continuous batching for fleets of integrals.
+"""Batch quadrature service: continuous batching for fleets of integrals,
+sharded across the device mesh.
 
 Layers (bottom up):
 
 - :mod:`repro.service.batch_engine` — a vmapped adaptive step over a stacked
   region store (leading problem axis), per-slot convergence masks, one
-  compiled executable per window rung shared by the whole batch;
+  compiled executable per window rung shared by the whole batch; the slot
+  axis shards over a device mesh (each device owns a contiguous block and
+  runs the step locally), fleet-wide progress is decided from a psum of
+  per-slot done masks once per fused ``sync_every`` dispatch, and drained
+  devices pull whole problems from their cyclic ring partner (the paper's
+  round-robin redistribution, lifted from regions to problems);
 - :mod:`repro.service.scheduler` — the continuous-batching loop: a request
   queue feeding batch slots, mid-flight admission into slots freed by
-  converged problems, eviction of capacity-saturated slots;
+  converged problems (targeting the device that owns the freed slot),
+  eviction of capacity-saturated slots;
 - :mod:`repro.service.api` — ``integrate_batch`` / ``serve`` entry points.
+
+Results are bit-identical at every device count, for every terminal status.
 """
 
 from repro.service.api import integrate_batch, serve

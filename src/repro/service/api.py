@@ -46,9 +46,11 @@ def serve(
     cfg: QuadratureConfig,
     requests: Iterable[QuadRequest],
     family: Union[ParamIntegrand, str, None] = None,
+    mesh=None,
+    devices=None,
 ) -> Iterator[QuadResult]:
     """Stream results for an arbitrary request iterable (convergence order)."""
-    return BatchScheduler(cfg, family).serve(requests)
+    return BatchScheduler(cfg, family, mesh=mesh, devices=devices).serve(requests)
 
 
 def integrate_batch(
@@ -57,6 +59,8 @@ def integrate_batch(
     family: Union[ParamIntegrand, str, None] = None,
     rel_tol: Union[float, Sequence[float], None] = None,
     abs_tol: Union[float, Sequence[float], None] = None,
+    mesh=None,
+    devices=None,
 ) -> list[QuadResult]:
     """Integrate a fleet of problems; results in submission order.
 
@@ -65,6 +69,10 @@ def integrate_batch(
     every problem, per-problem sequences, or ``None`` for the ``cfg``
     defaults.  ``family`` defaults to the family named by ``cfg.integrand``
     (its spec prefix before the first ``:``).
+
+    ``mesh`` / ``devices`` shard the slot axis across a device mesh (see
+    :class:`~repro.service.batch_engine.BatchEngine`); results are
+    bit-identical at every device count.
     """
     theta_list = _as_theta_list(thetas)
     n = len(theta_list)
@@ -83,7 +91,7 @@ def integrate_batch(
         for i, (t, r, a) in enumerate(zip(theta_list, rels, abss))
     ]
     results: list[Optional[QuadResult]] = [None] * n
-    for res in serve(cfg, requests, family):
+    for res in serve(cfg, requests, family, mesh=mesh, devices=devices):
         results[res.req_id] = res
     missing = [i for i, r in enumerate(results) if r is None]
     if missing:  # pragma: no cover - invariant guard

@@ -1,4 +1,5 @@
-"""Batched adaptive quadrature engine: one compiled step for B problems.
+"""Batched adaptive quadrature engine: one compiled step for B problems,
+sharded across the device mesh.
 
 The single-problem drivers in :mod:`repro.core.adaptive` solve one integral
 per invocation.  Fleets of *related* integrals ``∫ f(x; theta_k) dx`` over a
@@ -10,17 +11,31 @@ the fleet shares one XLA program and the hardware sees one big batch of
 regions instead of B small ones.
 
 Heterogeneous convergence across the fleet is the same load-imbalance
-problem the paper solves across devices; here it is solved across batch
-slots by *continuous batching* (the idiom of the LLM serving engine in
-``repro.serving``): per-slot ``done`` masks turn converged problems into
-pass-throughs, and the scheduler splices a fresh initial partition into a
-freed slot mid-flight (:func:`~repro.core.region_store.write_slot`) without
-recompilation.
+problem the paper solves across devices, and here both axes compose:
+
+- *across batch slots* — continuous batching (the idiom of the LLM serving
+  engine in ``repro.serving``): per-slot ``done`` masks turn converged
+  problems into pass-throughs and the scheduler splices a fresh initial
+  partition into a freed slot mid-flight
+  (:func:`~repro.core.region_store.write_slot`) without recompilation;
+- *across devices* — the leading problem axis is sharded over a mesh
+  (``shard_map``): each device owns a contiguous block of
+  ``batch_slots / n_devices`` slots and runs the vmapped windowed step
+  locally; fleet-wide progress (any slot newly done? how many live?) is
+  decided from a ``psum`` of per-slot done masks once per fused dispatch;
+  and when a device's live slots drain, whole *problems* migrate from its
+  cyclic ring partner — the paper's round-robin redistribution scheme
+  (:mod:`repro.core.redistribution`), lifted from regions to problems.
+
+Because batch slots evolve independently (a problem's trajectory never
+depends on which slot or device hosts it), sharding and migration preserve
+bit-identical results: every terminal ``QuadResult`` — converged, max_iters,
+or evicted — matches the single-device service exactly.
 
 Window discipline: the eval window must be a single static shape per
-dispatch, so the engine picks the smallest ladder rung covering the *widest*
-live slot (``lax.switch`` at the top level, each branch the vmapped eval at
-one rung).  By the active-window invariance argument (any window >=
+dispatch, so each device picks the smallest ladder rung covering the widest
+live slot it owns (``lax.switch`` at the top level, each branch the vmapped
+eval at one rung).  By the active-window invariance argument (any window >=
 n_active is exact) every slot gets bit-identical estimates to its own
 serial run at that rung — there is exactly one compiled executable per
 (d, rule, window-rung), shared across the whole batch.
@@ -35,6 +50,7 @@ from typing import Any, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import region_store
 from repro.core.adaptive import (
@@ -44,9 +60,18 @@ from repro.core.adaptive import (
     make_eval_step,
 )
 from repro.core.config import QuadratureConfig
+from repro.core.distributed import _shard_map
 from repro.core.integrands import ParamIntegrand, get_param
+from repro.core.redistribution import (
+    dispatch_cyclic,
+    exchange_pair_stats,
+    make_schedule,
+    ring_perms,
+)
 from repro.core.region_store import RegionState
 from repro.core.rules import make_rule
+
+AXIS = "dev"
 
 
 @partial(
@@ -89,17 +114,67 @@ def _select_slots(mask: jnp.ndarray, new, old):
     return jax.tree.map(sel, new, old)
 
 
+def _ppermute_tree(tree, axis_name: str, perm):
+    """ppermute every leaf of a pytree (bools ride as uint8 for portability)."""
+
+    def pp(leaf):
+        if leaf.dtype == jnp.bool_:
+            sent = jax.lax.ppermute(leaf.astype(jnp.uint8), axis_name, perm)
+            return sent.astype(bool)
+        return jax.lax.ppermute(leaf, axis_name, perm)
+
+    return jax.tree.map(pp, tree)
+
+
+def estimate_state_bytes(
+    cfg: QuadratureConfig, family: Union[ParamIntegrand, str, None] = None
+) -> int:
+    """Device bytes of the engine's :class:`BatchState` for ``cfg``.
+
+    The stacked store is the dominant service allocation
+    (``batch_slots x capacity`` regions); CLIs use this to fail fast on
+    slot counts the store memory cannot accommodate, before the engine
+    tries (and fails, unhelpfully) to allocate them.
+    """
+    cfg = cfg.validate()
+    if family is None:
+        family = cfg.integrand.partition(":")[0]
+    if isinstance(family, str):
+        family = get_param(family)
+    item = jnp.dtype(cfg.dtype).itemsize
+    C, d = cfg.capacity, cfg.d
+    per_slot = (
+        2 * C * d * item  # centers + halfw
+        + 2 * C * item  # est + err
+        + 4 * C  # axis (int32)
+        + 2 * C  # active + fresh (bool)
+        + 3 * item + 4 + 1  # fin_integral, fin_error, n_evals, it, overflowed
+        + len(family.theta_fields) * d * item  # theta
+        + 2 * item + 4 + 2  # rel_tol, abs_tol, overflow_it, occupied, done
+    )
+    return cfg.batch_slots * per_slot
+
+
 class BatchEngine:
     """Compiled-step executor for a fixed-shape fleet of one integrand family.
 
     All problems share ``cfg``'s static shape (d, capacity, rule, domain) and
     differ only in theta and tolerances — that is what makes the batch a
     single XLA program.  The scheduler (:mod:`repro.service.scheduler`)
-    drives :meth:`step` from the host, admitting and collecting per slot.
+    drives :meth:`run` from the host, admitting and collecting per slot.
+
+    ``mesh`` / ``devices`` shard the slot axis: slot ``s`` lives on device
+    ``s // (batch_slots / n_devices)``.  With one device (the default) the
+    engine is the plain single-device vmapped fleet.  ``cfg.service_devices``
+    picks a mesh size when neither argument is given (0 = all visible).
     """
 
     def __init__(
-        self, cfg: QuadratureConfig, family: Union[ParamIntegrand, str, None] = None
+        self,
+        cfg: QuadratureConfig,
+        family: Union[ParamIntegrand, str, None] = None,
+        mesh=None,
+        devices=None,
     ):
         cfg = cfg.validate()
         if cfg.use_kernel:
@@ -117,6 +192,19 @@ class BatchEngine:
         self.family = family
         self.n_slots = cfg.batch_slots
 
+        mesh = self._resolve_mesh(cfg, mesh, devices)
+        self.mesh = mesh
+        self.n_devices = 1 if mesh is None else mesh.shape[AXIS]
+        if self.n_slots % self.n_devices:
+            raise ValueError(
+                f"batch_slots={self.n_slots} must be a multiple of the mesh "
+                f"size ({self.n_devices} devices): each device owns a "
+                "contiguous block of batch_slots / n_devices slots"
+            )
+        self.slots_per_device = self.n_slots // self.n_devices
+        # a pair can never usefully exchange more problems than one side owns
+        self.rebalance_cap = min(cfg.rebalance_cap, self.slots_per_device)
+
         lo = np.asarray(cfg.lo(), np.float64)
         hi = np.asarray(cfg.hi(), np.float64)
         self._total_volume = float(np.prod(hi - lo))
@@ -132,10 +220,64 @@ class BatchEngine:
             family.sample_theta(cfg.d, np.random.default_rng(0)),
         )
 
-        donate = donate_argnums()
+        platform = (
+            mesh.devices.flat[0].platform if mesh is not None else None
+        )
+        donate = donate_argnums(platform)
+        self._iter = self._make_iter()
         self._step = jax.jit(self._make_step(), donate_argnums=donate)
-        self._admit = jax.jit(self._make_admit(), donate_argnums=donate)
-        self._release = jax.jit(self._make_release(), donate_argnums=donate)
+        self._run = jax.jit(self._make_run(), donate_argnums=donate)
+        self._admit = jax.jit(self._sharded(self._make_admit()), donate_argnums=donate)
+        self._release = jax.jit(
+            self._sharded(self._make_release()), donate_argnums=donate
+        )
+
+    @staticmethod
+    def _resolve_mesh(cfg: QuadratureConfig, mesh, devices):
+        if mesh is not None:
+            if AXIS not in mesh.shape:
+                raise ValueError(f"mesh must have a {AXIS!r} axis, got {mesh}")
+        else:
+            if devices is None:
+                if cfg.service_devices == 1:
+                    return None
+                avail = jax.devices()
+                want = (
+                    len(avail)
+                    if cfg.service_devices == 0
+                    else cfg.service_devices
+                )
+                if want > len(avail):
+                    raise ValueError(
+                        f"service_devices={cfg.service_devices} but only "
+                        f"{len(avail)} devices are visible"
+                    )
+                devices = avail[:want]
+            if len(devices) == 1:
+                return None
+            mesh = jax.make_mesh((len(devices),), (AXIS,), devices=devices)
+        if mesh.shape[AXIS] == 1:
+            return None  # a 1-mesh is just the single-device path
+        return mesh
+
+    def _sharded(self, fn):
+        """Wrap a (state, *scalars) -> state op in shard_map when meshed.
+
+        The state rides split over the slot axis; every other argument is
+        replicated.  On a single device the op is used as-is.
+        """
+        if self.mesh is None:
+            return fn
+
+        def wrapper(state, *args):
+            return _shard_map(
+                fn,
+                mesh=self.mesh,
+                in_specs=(P(AXIS),) + (P(),) * len(args),
+                out_specs=P(AXIS),
+            )(state, *args)
+
+        return wrapper
 
     # --- state construction --------------------------------------------------
 
@@ -143,7 +285,7 @@ class BatchEngine:
         """All slots empty; admit problems before stepping."""
         cfg = self.cfg
         B = self.n_slots
-        return BatchState(
+        state = BatchState(
             regions=region_store.stacked_empty_state(
                 B, cfg.capacity, cfg.d, self._dtype
             ),
@@ -157,34 +299,52 @@ class BatchEngine:
             done=jnp.zeros((B,), bool),
             overflow_it=jnp.full((B,), -1, jnp.int32),
         )
+        if self.mesh is not None:
+            state = jax.device_put(state, NamedSharding(self.mesh, P(AXIS)))
+        return state
 
     # --- jitted slot operations ----------------------------------------------
+
+    def _localize(self, slot):
+        """Global slot index -> per-device local index (OOB on non-owners).
+
+        Inside shard_map every device sees its own contiguous slot block;
+        the owner writes at ``slot - base`` and everyone else scatters to the
+        out-of-bounds sentinel, dropped by ``mode="drop"``.
+        """
+        if self.n_devices == 1:
+            return slot
+        local = self.slots_per_device
+        base = jax.lax.axis_index(AXIS) * local
+        owns = (slot >= base) & (slot < base + local)
+        return jnp.where(owns, slot - base, local)
 
     def _make_admit(self):
         fresh = self._fresh_slot
 
         def admit(state: BatchState, slot, theta, rel_tol, abs_tol) -> BatchState:
+            at = self._localize(slot)
+            put = lambda dst, src: dst.at[at].set(src, mode="drop")
             return dataclasses.replace(
                 state,
-                regions=region_store.write_slot(state.regions, slot, fresh),
-                theta=jax.tree.map(
-                    lambda dst, src: dst.at[slot].set(src), state.theta, theta
-                ),
-                rel_tol=state.rel_tol.at[slot].set(rel_tol),
-                abs_tol=state.abs_tol.at[slot].set(abs_tol),
-                occupied=state.occupied.at[slot].set(True),
-                done=state.done.at[slot].set(False),
-                overflow_it=state.overflow_it.at[slot].set(-1),
+                regions=region_store.write_slot(state.regions, at, fresh, mode="drop"),
+                theta=jax.tree.map(put, state.theta, theta),
+                rel_tol=put(state.rel_tol, rel_tol),
+                abs_tol=put(state.abs_tol, abs_tol),
+                occupied=put(state.occupied, True),
+                done=put(state.done, False),
+                overflow_it=put(state.overflow_it, -1),
             )
 
         return admit
 
     def _make_release(self):
         def release(state: BatchState, slot) -> BatchState:
+            at = self._localize(slot)
             return dataclasses.replace(
                 state,
-                occupied=state.occupied.at[slot].set(False),
-                done=state.done.at[slot].set(False),
+                occupied=state.occupied.at[at].set(False, mode="drop"),
+                done=state.done.at[at].set(False, mode="drop"),
             )
 
         return release
@@ -227,7 +387,15 @@ class BatchEngine:
 
     # --- the batched adaptive step -------------------------------------------
 
-    def _make_step(self):
+    def _make_iter(self):
+        """One adaptive iteration over whatever slot block the caller holds.
+
+        Shape-polymorphic in the leading slot axis: the single-device step
+        applies it to all ``batch_slots`` slots, the sharded fused run to each
+        device's local block — the same traced math either way, which is what
+        makes device-count parity structural rather than coincidental.
+        Returns ``(state, metrics, n_new_done)``.
+        """
         cfg = self.cfg
         family = self.family
         total_volume = self._total_volume
@@ -246,7 +414,7 @@ class BatchEngine:
         # the serial drivers' advance, vmapped with per-slot traced tolerances
         advance = jax.vmap(make_advance_step(cfg, total_volume, self._width))
 
-        def step(state: BatchState):
+        def iter_fn(state: BatchState):
             live = state.occupied & ~state.done
             counts = jnp.sum(state.regions.active, axis=1).astype(jnp.int32)
             widest = jnp.max(jnp.where(live, counts, 0))
@@ -279,6 +447,7 @@ class BatchEngine:
             capped = regions.it >= cfg.max_iters - 1
             terminal = converged | (n_active == 0) | capped | evicted
             done = state.done | (live & terminal)
+            n_new_done = jnp.sum(done & ~state.done).astype(jnp.int32)
 
             advanced = advance(regions, budget, state.rel_tol)
             regions = _select_slots(state.occupied & ~done, advanced, regions)
@@ -308,7 +477,17 @@ class BatchEngine:
                     state, regions=regions, done=done, overflow_it=overflow_it
                 ),
                 metrics,
+                n_new_done,
             )
+
+        return iter_fn
+
+    def _make_step(self):
+        iter_fn = self._iter
+
+        def step(state: BatchState):
+            state, metrics, _ = iter_fn(state)
+            return state, metrics
 
         return step
 
@@ -319,6 +498,211 @@ class BatchEngine:
         ``n_active``, ``it``, ``n_evals``, ``overflowed``, ``converged``,
         ``done``, ``occupied`` plus the scalar eval ``window`` used.  Slots
         whose ``done`` flips on are frozen (no further advance) until the
-        scheduler collects and releases them.
+        scheduler collects and releases them.  (On a sharded engine this is
+        the GSPMD form; the scheduler drives :meth:`run` instead.)
         """
         return self._step(state)
+
+    # --- problem-level cyclic rebalancing ------------------------------------
+
+    def _make_rebalance_round(self):
+        """One migration round: the paper's cyclic round-robin pairing
+        (:func:`repro.core.redistribution.redistribute`), lifted from regions
+        to whole problems.  A device whose live-slot count fell below the
+        fleet's fair share — its problems converged and were collected while
+        the queue ran dry — receives up to ``rebalance_cap`` entire problems
+        (region store + theta + tolerances) from its ring partner at the
+        scheduled shift.  Migration cannot change any result: slots evolve
+        independently, so moving one only changes which device pays for it.
+        """
+        n_dev = self.n_devices
+        cap = self.rebalance_cap
+        local = self.slots_per_device
+        schedule = make_schedule(n_dev)
+
+        def round_fn(shift: int):
+            _, perm_up = ring_perms(n_dev, shift)
+
+            def fn(state: BatchState):
+                occupied = state.occupied
+                live = occupied & ~state.done
+                n_live = jnp.sum(live).astype(jnp.int32)
+                n_free = jnp.sum(~occupied).astype(jnp.int32)
+                total = jax.lax.psum(n_live, AXIS)
+                fair = total // n_dev  # floor: migrate only into real holes
+                surplus = jnp.maximum(n_live - fair, 0)
+                deficit = jnp.maximum(fair - n_live, 0)
+                stats = jnp.stack([n_live, n_free, surplus, deficit])
+                down_stats, up_stats = exchange_pair_stats(
+                    stats, AXIS, n_dev, shift
+                )
+                _, down_free, _, down_deficit = down_stats
+                _, _, up_surplus, _ = up_stats
+                n_send = jnp.minimum(
+                    jnp.minimum(jnp.int32(cap), surplus),
+                    jnp.minimum(down_deficit, down_free),
+                )
+                n_recv = jnp.minimum(
+                    jnp.minimum(jnp.int32(cap), up_surplus),
+                    jnp.minimum(deficit, n_free),
+                )
+
+                idx = jnp.arange(local, dtype=jnp.int32)
+                j = jnp.arange(cap, dtype=jnp.int32)
+                base = (jax.lax.axis_index(AXIS) * local).astype(jnp.int32)
+
+                # --- donor: pick the highest-index live slots --------------
+                skey = jnp.where(live, -idx, jnp.int32(local + 1))
+                src_local = jnp.argsort(skey)[:cap].astype(jnp.int32)
+                valid_send = j < n_send
+                payload = (
+                    state.regions,
+                    state.theta,
+                    state.rel_tol,
+                    state.abs_tol,
+                    state.overflow_it,
+                )
+                picked = jax.tree.map(lambda leaf: leaf[src_local], payload)
+                src_global = jnp.where(valid_send, base + src_local, -1)
+                incoming = _ppermute_tree(picked, AXIS, perm_up)
+                src_global_in = jax.lax.ppermute(src_global, AXIS, perm_up)
+                send_mask = jnp.zeros((local,), bool).at[src_local].set(valid_send)
+                occupied = occupied & ~send_mask
+
+                # --- receiver: splice into the lowest-index free slots -----
+                rkey = jnp.where(state.occupied, jnp.int32(local + 1), idx)
+                dst_local = jnp.argsort(rkey)[:cap].astype(jnp.int32)
+                valid_recv = j < n_recv
+                dst = jnp.where(valid_recv, dst_local, local)  # local = dropped
+                in_regions, in_theta, in_rel, in_abs, in_overflow = incoming
+                put = lambda cur, new: cur.at[dst].set(new, mode="drop")
+                moved = jnp.stack(
+                    [
+                        jnp.where(valid_recv, src_global_in, -1),
+                        jnp.where(valid_recv, base + dst_local, -1),
+                    ],
+                    axis=1,
+                )
+                return (
+                    dataclasses.replace(
+                        state,
+                        regions=jax.tree.map(put, state.regions, in_regions),
+                        theta=jax.tree.map(put, state.theta, in_theta),
+                        rel_tol=put(state.rel_tol, in_rel),
+                        abs_tol=put(state.abs_tol, in_abs),
+                        overflow_it=put(state.overflow_it, in_overflow),
+                        occupied=occupied.at[dst].set(True, mode="drop"),
+                        done=put(state.done, jnp.zeros((cap,), bool)),
+                    ),
+                    moved,
+                )
+
+            return fn
+
+        def rebalance(state: BatchState, t):
+            return dispatch_cyclic(schedule, t, round_fn, state)
+
+        return rebalance
+
+    # --- the fused multi-iteration dispatch -----------------------------------
+
+    def _make_run(self):
+        """Build the K-fused dispatch (K = ``cfg.sync_every``).
+
+        Runs up to ``max_steps`` iterations in one XLA dispatch and stops
+        early — remaining iterations become pass-throughs — as soon as any
+        live slot's ``done`` flips on (decided from a psum of per-slot done
+        masks, the fleet's single global sync point), so the host scheduler
+        observes every collection at its exact iteration and can replay
+        admission/eviction decisions identically to an unfused loop.
+        """
+        cfg = self.cfg
+        n_dev = self.n_devices
+        iter_fn = self._iter
+        rebalance_on = n_dev > 1 and cfg.rebalance != "off"
+        rebalance = self._make_rebalance_round() if rebalance_on else None
+        moved_rows = self.rebalance_cap if n_dev > 1 else 0
+        dtype = self._dtype
+
+        def no_moves():
+            return jnp.full((moved_rows, 2), -1, jnp.int32)
+
+        def zero_metrics(state: BatchState):
+            B = state.occupied.shape[0]
+            z = jnp.zeros
+            return {
+                "integral": z((B,), dtype),
+                "error": z((B,), dtype),
+                "n_active": z((B,), jnp.int32),
+                "it": z((B,), jnp.int32),
+                "n_evals": z((B,), dtype),
+                "overflowed": z((B,), bool),
+                "converged": z((B,), bool),
+                "done": z((B,), bool),
+                "occupied": z((B,), bool),
+                "window": z((), jnp.int32),
+            }
+
+        def run_body(state: BatchState, max_steps, tick):
+            def one(carry, t):
+                state, stop = carry
+                go = (~stop) & (t < max_steps)
+
+                def do(state):
+                    state, metrics, n_new = iter_fn(state)
+                    if n_dev > 1:
+                        n_new = jax.lax.psum(n_new, AXIS)
+                    if rebalance_on:
+                        state, moved = rebalance(state, tick + t)
+                    else:
+                        moved = no_moves()
+                    return state, metrics, moved, n_new > 0
+
+                def skip(state):
+                    return state, zero_metrics(state), no_moves(), jnp.asarray(True)
+
+                state, m, moved, stop = jax.lax.cond(go, do, skip, state)
+                return (state, stop), (m, moved, go)
+
+            (state, _), (ms, moved, executed) = jax.lax.scan(
+                one,
+                (state, jnp.asarray(False)),
+                jnp.arange(cfg.sync_every, dtype=jnp.int32),
+            )
+            # per-device eval window, shaped for the slot-axis out_spec
+            ms = {**ms, "window": ms["window"][:, None]}
+            return state, ms, executed, moved
+
+        if self.mesh is None:
+            return run_body
+        return _shard_map(
+            run_body,
+            mesh=self.mesh,
+            in_specs=(P(AXIS), P(), P()),
+            out_specs=(P(AXIS), P(None, AXIS), P(), P(None, AXIS, None)),
+        )
+
+    def run(self, state: BatchState, max_steps: int, tick: int):
+        """Up to ``min(max_steps, cfg.sync_every)`` fused iterations.
+
+        Returns ``(state, metrics, executed, moved)``:
+
+        - ``metrics`` — per-slot arrays stacked over the fused iterations,
+          shape ``(sync_every, batch_slots)`` (``window`` is per device);
+        - ``executed`` — ``(sync_every,)`` prefix mask of iterations that
+          actually ran; the first unexecuted row follows either the
+          ``max_steps`` cap or an early exit on a done-flip, so the last
+          executed row is where every newly finished slot finished;
+        - ``moved`` — ``(sync_every, n_devices * rebalance_cap, 2)`` int32
+          ``(src_slot, dst_slot)`` migration records per iteration (-1 =
+          unused row); the host applies them to its slot -> request map in
+          iteration order, after collecting that iteration's done slots.
+
+        ``tick`` is the fleet-global iteration number of the first fused
+        iteration (indexes the cyclic migration schedule).
+        """
+        return self._run(
+            state,
+            jnp.asarray(min(int(max_steps), self.cfg.sync_every), jnp.int32),
+            jnp.asarray(tick, jnp.int32),
+        )

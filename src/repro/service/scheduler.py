@@ -8,6 +8,22 @@ and finished slots are collected and yielded as :class:`QuadResult`\\ s as
 soon as their ``done`` flag flips, in convergence order rather than
 submission order.
 
+The engine is driven through its fused :meth:`~BatchEngine.run` protocol:
+up to ``cfg.sync_every`` iterations execute per dispatch and the dispatch
+exits early — from an on-device psum of per-slot done masks — the moment any
+slot finishes, so the host observes every collection at its exact iteration.
+The scheduler additionally caps a dispatch so it cannot run past the next
+``admit_every`` tick while an admission is pending.  Together these make the
+fused loop replay the unfused per-iteration loop decision-for-decision:
+results (including ``admitted_at`` / ``finished_at``) are bit-identical at
+any ``sync_every`` and any device count.
+
+On a sharded engine the scheduler is also mesh-aware: admissions target the
+device that owns the freed slot (free slots are filled on the least-loaded
+device first, so fresh problems spread across the mesh), and the migration
+records the engine emits when its cyclic rebalancer moves a problem between
+devices are replayed onto the host's slot -> request map in iteration order.
+
 Termination taxonomy per request (mirrors ``AdaptiveResult.status``):
 
 - ``converged`` — error estimate under the request's budget;
@@ -25,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Iterable, Iterator, Optional, Union
 
+import jax
 import numpy as np
 
 from repro.core.adaptive import result_status
@@ -64,16 +81,35 @@ class QuadResult:
 
 
 class BatchScheduler:
-    """Drives a :class:`BatchEngine` over an arbitrary stream of requests."""
+    """Drives a :class:`BatchEngine` over an arbitrary stream of requests.
+
+    After :meth:`serve` completes, :attr:`last_stats` holds host-loop
+    counters for the run: ``iterations`` (fleet iterations), ``dispatches``
+    (fused engine launches) and ``migrations`` (problems moved between
+    devices by the cyclic rebalancer).
+    """
 
     def __init__(
         self,
         cfg: QuadratureConfig,
         family: Union[ParamIntegrand, str, None] = None,
         engine: Optional[BatchEngine] = None,
+        mesh=None,
+        devices=None,
     ):
-        self.engine = engine if engine is not None else BatchEngine(cfg, family)
+        if engine is not None:
+            if mesh is not None or devices is not None:
+                raise ValueError(
+                    "pass mesh/devices to the BatchEngine, not alongside an "
+                    "explicit engine: the engine's mesh is fixed at "
+                    "construction and a conflicting argument here would be "
+                    "silently ignored"
+                )
+            self.engine = engine
+        else:
+            self.engine = BatchEngine(cfg, family, mesh=mesh, devices=devices)
         self.cfg = self.engine.cfg
+        self.last_stats: dict = {"iterations": 0, "dispatches": 0, "migrations": 0}
 
     def serve(self, requests: Iterable[QuadRequest]) -> Iterator[QuadResult]:
         """Run the fleet to completion, yielding results as slots converge.
@@ -83,20 +119,57 @@ class BatchScheduler:
         naturally).  Every request yields exactly one result.
         """
         engine = self.engine
+        cfg = self.cfg
         B = engine.n_slots
+        per_dev = engine.slots_per_device
         pending = iter(requests)
+        exhausted = False  # the iterator signalled StopIteration
         slot_req: list[Optional[QuadRequest]] = [None] * B
         slot_admitted = np.zeros(B, np.int64)
+        stats = {"iterations": 0, "dispatches": 0, "migrations": 0}
+        self.last_stats = stats
         state = engine.init()
         it = 0
 
         def pull() -> Optional[QuadRequest]:
-            return next(pending, None)
+            # Requests are pulled ONLY here, from admission passes — never
+            # speculatively — so a generator that derives its next request
+            # from results yielded so far sees exactly the per-iteration
+            # loop's pull points, and an unbounded stream backpressures on
+            # slot availability.
+            nonlocal exhausted
+            if exhausted:
+                return None
+            req = next(pending, None)
+            if req is None:
+                exhausted = True
+            return req
+
+        def admission_order() -> list[int]:
+            """Free slots, least-loaded device first (plain slot order on one
+            device, which is exactly the legacy single-device fill order)."""
+            free = [s for s in range(B) if slot_req[s] is None]
+            if engine.n_devices == 1:
+                return free
+            load = [0] * engine.n_devices
+            for s in range(B):
+                if slot_req[s] is not None:
+                    load[s // per_dev] += 1
+            # admitting onto a device raises its load for the next pick, so
+            # a burst of admissions round-robins across the drained devices
+            order: list[int] = []
+            free_per_dev = [[s for s in free if s // per_dev == d] for d in range(engine.n_devices)]
+            for _ in free:
+                dev = min(
+                    (d for d in range(engine.n_devices) if free_per_dev[d]),
+                    key=lambda d: (load[d], d),
+                )
+                order.append(free_per_dev[dev].pop(0))
+                load[dev] += 1
+            return order
 
         def admit_free_slots(state: BatchState) -> BatchState:
-            for slot in range(B):
-                if slot_req[slot] is not None:
-                    continue
+            for slot in admission_order():
                 req = pull()
                 if req is None:
                     break
@@ -107,43 +180,83 @@ class BatchScheduler:
                 slot_admitted[slot] = it
             return state
 
+        def apply_moves(rows: np.ndarray) -> None:
+            """Replay one iteration's device-side migrations onto the host
+            map.  Within a round sources (live slots) and destinations
+            (previously free slots) are disjoint, so copy-then-clear is
+            exact."""
+            valid = [(int(s), int(d)) for s, d in rows if s >= 0]
+            if not valid:
+                return
+            snapshot_req = list(slot_req)
+            snapshot_adm = slot_admitted.copy()
+            for src, dst in valid:
+                assert snapshot_req[src] is not None, (src, dst)
+                slot_req[dst] = snapshot_req[src]
+                slot_admitted[dst] = snapshot_adm[src]
+                slot_req[src] = None
+            stats["migrations"] += len(valid)
+
         state = admit_free_slots(state)
         while any(r is not None for r in slot_req):
-            state, metrics = engine.step(state)
+            # A dispatch may not run past the next admit tick while an
+            # admission may be pending (free slot + a queue not yet known to
+            # be exhausted) — the tick is a host decision the device cannot
+            # replay.  Whether the queue actually still holds a request is
+            # only discovered AT the tick, preserving the unfused loop's
+            # exact pull timing; once the iterator is exhausted, full-length
+            # dispatches resume for the drain phase.
+            max_steps = cfg.sync_every
+            if not exhausted and any(r is None for r in slot_req):
+                max_steps = min(max_steps, cfg.admit_every - it % cfg.admit_every)
+            state, ms, executed, moved = engine.run(state, max_steps, it)
+            ms, executed, moved = jax.device_get((ms, executed, moved))
+            k = int(np.sum(executed))
+            assert k >= 1, "fused dispatch executed no iterations"
+            stats["dispatches"] += 1
+            stats["iterations"] += k
+            for t in range(k - 1):
+                it += 1
+                apply_moves(moved[t])
             it += 1
-            done = np.asarray(metrics["done"])
-            occupied = np.asarray(metrics["occupied"])
-            if np.any(done & occupied):
-                metrics = {k: np.asarray(v) for k, v in metrics.items()}
-                for slot in range(B):
-                    if not (done[slot] and occupied[slot]):
-                        continue
-                    req = slot_req[slot]
-                    yield QuadResult(
-                        req_id=req.req_id,
-                        integral=float(metrics["integral"][slot]),
-                        error=float(metrics["error"][slot]),
-                        status=result_status(
-                            bool(metrics["converged"][slot]),
-                            int(metrics["n_active"][slot]),
-                            int(metrics["it"][slot]),
-                            self.cfg,
-                            bool(metrics["overflowed"][slot]),
-                        ),
-                        iterations=int(metrics["it"][slot]),
-                        n_evals=float(metrics["n_evals"][slot]),
-                        admitted_at=int(slot_admitted[slot]),
-                        finished_at=it,
-                    )
-                    state = engine.release(state, slot)
-                    slot_req[slot] = None
+            done = ms["done"][k - 1]
+            occupied = ms["occupied"][k - 1]
+            finished = [
+                (slot_req[s].req_id, s)
+                for s in range(B)
+                if done[s] and occupied[s] and slot_req[s] is not None
+            ]
+            # req_id order: deterministic across device counts (collection
+            # within one iteration has no inherent slot order anyway)
+            for req_id, slot in sorted(finished):
+                yield QuadResult(
+                    req_id=req_id,
+                    integral=float(ms["integral"][k - 1][slot]),
+                    error=float(ms["error"][k - 1][slot]),
+                    status=result_status(
+                        bool(ms["converged"][k - 1][slot]),
+                        int(ms["n_active"][k - 1][slot]),
+                        int(ms["it"][k - 1][slot]),
+                        cfg,
+                        bool(ms["overflowed"][k - 1][slot]),
+                    ),
+                    iterations=int(ms["it"][k - 1][slot]),
+                    n_evals=float(ms["n_evals"][k - 1][slot]),
+                    admitted_at=int(slot_admitted[slot]),
+                    finished_at=it,
+                )
+            # migrations of the final executed iteration happened *after* its
+            # metrics snapshot (and done slots never migrate), so the map
+            # update follows collection
+            apply_moves(moved[k - 1])
+            for _, slot in finished:
+                state = engine.release(state, slot)
+                slot_req[slot] = None
             # Admit on the configured cadence — but never let the fleet go
             # idle with work still queued: if every slot just drained we
             # admit immediately rather than spinning (or exiting) until the
             # next admit tick.
-            if it % self.cfg.admit_every == 0 or all(
-                r is None for r in slot_req
-            ):
+            if it % cfg.admit_every == 0 or all(r is None for r in slot_req):
                 state = admit_free_slots(state)
         # drain: nothing in flight, so nothing may remain unadmitted
         leftover = pull()

@@ -1,0 +1,156 @@
+"""Self-contained sharded-service parity self-test (subprocess-run by tests).
+
+Must be launched as ``python -m repro.service.sharded_selftest [n_devices]``
+— sets XLA_FLAGS before importing jax, then runs the batch quadrature
+service over meshes of 1, 2, ..., n_devices virtual devices and asserts the
+acceptance criterion of the sharded service: every :class:`QuadResult`
+(integral, error, status, iterations, n_evals, admitted_at, finished_at) is
+bit-identical at every device count, for every terminal status —
+``converged``, ``max_iters`` and ``evicted`` (status ``capacity``) — with
+mid-flight admission exercised, and with the cyclic problem rebalancer both
+on and off (a drain-heavy case asserts it actually migrates).  Prints one
+JSON blob on the last line.
+"""
+
+import json
+import os
+import sys
+
+
+def _tuples(results):
+    return [
+        (
+            r.req_id,
+            r.integral.hex() if hasattr(r.integral, "hex") else r.integral,
+            r.error.hex() if hasattr(r.error, "hex") else r.error,
+            r.status,
+            r.iterations,
+            r.n_evals,
+            r.admitted_at,
+            r.finished_at,
+        )
+        for r in sorted(results, key=lambda r: r.req_id)
+    ]
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import QuadratureConfig
+    from repro.core.integrands import get_param
+    from repro.service import BatchScheduler, QuadRequest
+
+    assert len(jax.devices()) == n_dev, jax.devices()
+    # batch_slots=8 below divides every mesh size up to 8
+    counts = [c for c in (1, 2, 4, 8) if c <= n_dev]
+    family = get_param("genz_gaussian")
+    d = 2
+
+    def requests(n, seed, rel_tols=None):
+        rng = np.random.default_rng(seed)
+        return [
+            QuadRequest(
+                req_id=i,
+                theta=family.sample_theta(d, rng),
+                rel_tol=None if rel_tols is None else rel_tols[i],
+            )
+            for i in range(n)
+        ]
+
+    base = dict(d=d, integrand="genz_gaussian", sync_every=4)
+    cases = {
+        # more requests than slots: mid-flight admission on every mesh
+        "converged_midflight": (
+            QuadratureConfig(
+                **base, rel_tol=1e-5, capacity=1 << 9, batch_slots=8, max_iters=80
+            ),
+            lambda: requests(14, seed=0),
+        ),
+        # undersized store + hopeless tolerance: the hard slot overflows,
+        # grinds through evict_patience, and is evicted with status
+        # "capacity" while easy requests keep flowing through
+        "evicted": (
+            QuadratureConfig(
+                **base, rel_tol=1e-4, capacity=1 << 7, batch_slots=8, max_iters=80
+            ),
+            lambda: requests(12, seed=3, rel_tols=[1e-9] + [1e-4] * 11),
+        ),
+        # iteration cap: frozen after exactly max_iters eval sweeps
+        "max_iters": (
+            QuadratureConfig(
+                **base, rel_tol=1e-14, capacity=1 << 9, batch_slots=8, max_iters=6
+            ),
+            lambda: requests(8, seed=7),
+        ),
+        # drain-heavy fleet: the loose-tolerance problems land one per
+        # device (round-robin admission), finish early, and their devices
+        # pull queued work from ring partners — the migration case
+        # round-robin admission lands requests k, k+n_dev, ... on device k,
+        # so parity-striped tolerances drain half the devices completely
+        # (2 slots/device even on the 8-ring) while the other half stay busy
+        "rebalanced": (
+            QuadratureConfig(
+                **base, rel_tol=1e-8, capacity=1 << 10, batch_slots=16, max_iters=150
+            ),
+            lambda: requests(
+                16,
+                seed=1,
+                rel_tols=[1e-2 if i % 2 == 0 else 1e-8 for i in range(16)],
+            ),
+        ),
+    }
+
+    out = {"n_devices": n_dev, "device_counts": counts, "cases": {}}
+    for name, (cfg, make_reqs) in cases.items():
+        per_count = {}
+        migrations = {}
+        for c in counts:
+            sched = BatchScheduler(cfg, family, devices=jax.devices()[:c])
+            results = list(sched.serve(make_reqs()))
+            per_count[c] = _tuples(results)
+            migrations[c] = sched.last_stats["migrations"]
+        # rebalancing must be a pure placement change: identical results off
+        off = BatchScheduler(
+            QuadratureConfig(**{**cfg.__dict__, "rebalance": "off"}),
+            family,
+            devices=jax.devices()[: counts[-1]],
+        )
+        per_count["off"] = _tuples(list(off.serve(make_reqs())))
+        ref = per_count[1]
+        for key, tuples in per_count.items():
+            assert tuples == ref, (
+                name,
+                key,
+                [a for a, b in zip(tuples, ref) if a != b][:2],
+            )
+        statuses = sorted({t[3] for t in ref})
+        admitted = sorted({t[6] for t in ref})
+        out["cases"][name] = {
+            "statuses": statuses,
+            "midflight_admissions": sum(1 for t in ref if t[6] > 0),
+            "migrations": migrations,
+            "parity": True,
+            "n_results": len(ref),
+            "admitted_at": admitted,
+        }
+
+    # the drain-heavy case must actually exercise migration on a real ring
+    for c in counts[1:]:
+        assert out["cases"]["rebalanced"]["migrations"][c] > 0, out
+    assert "capacity" in out["cases"]["evicted"]["statuses"], out
+    assert "max_iters" in out["cases"]["max_iters"]["statuses"], out
+    assert out["cases"]["converged_midflight"]["midflight_admissions"] > 0, out
+
+    print("RESULT_JSON:" + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

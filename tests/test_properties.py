@@ -9,6 +9,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import genz_malik
+from repro.core.redistribution import make_schedule, ring_perms
 from repro.core.region_store import uniform_partition
 from repro.models.layers import blockwise_attention, rmsnorm, rmsnorm_init
 
@@ -80,6 +81,49 @@ def test_split_children_partition_parent(seed, axis):
     assert np.isclose(ca[axis] - h_child[axis], center[axis] - halfw[axis])
     assert np.isclose(cb[axis] + h_child[axis], center[axis] + halfw[axis])
     assert np.isclose(ca[axis] + h_child[axis], cb[axis] - h_child[axis])
+
+
+# --- cyclic redistribution schedule invariants ----------------------------------
+
+
+@given(n=st.integers(0, 5000), max_len=st.integers(1, 16))
+@settings(**_SETTINGS)
+def test_schedule_shifts_unique_bounded_in_range(n, max_len):
+    """Any ring size, any budget: shifts are unique, within the budget, and
+    always a valid ring distance (never 0 = self-pairing)."""
+    sched = make_schedule(n, max_len)
+    assert len(sched) == len(set(sched))
+    assert len(sched) <= max_len
+    for s in sched:
+        assert 1 <= s < n
+    if n > 1:
+        assert sched[0] == 1, "unit stride must lead the schedule"
+
+
+@given(n=st.integers(2, 64))
+@settings(**_SETTINGS)
+def test_schedule_visits_every_ring_shift_when_budget_allows(n):
+    """With budget for all n-1 distances, every one is visited — any
+    imbalance pattern is eventually smoothed regardless of where it sits."""
+    sched = make_schedule(n, max_len=n - 1)
+    assert set(sched) == set(range(1, n))
+
+
+@given(n=st.integers(2, 128), shift=st.integers(1, 127))
+@settings(**_SETTINGS)
+def test_ring_perms_are_self_pair_free_bijections(n, shift):
+    """Both ppermute index lists of a round are bijections of the ring with
+    no rank paired to itself, and they are mutual inverses (the stats that
+    go down come back up)."""
+    shift = 1 + shift % (n - 1) if n > 1 else 0
+    down, up = ring_perms(n, shift)
+    for perm in (down, up):
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        assert sorted(srcs) == list(range(n))
+        assert sorted(dsts) == list(range(n))
+        assert all(s != d for s, d in perm), "rank paired with itself"
+    assert {(d, s) for s, d in down} == set(up)
 
 
 # --- model invariants -----------------------------------------------------------

@@ -1,0 +1,108 @@
+"""Sharded batch service: device-count parity + CLI validation.
+
+Runs ``repro.service.sharded_selftest`` in a subprocess so that
+``--xla_force_host_platform_device_count`` can take effect (the main pytest
+process has already initialised jax with a single device).  The selftest
+itself asserts bit-identical ``QuadResult``\\ s across 1/2/4-device meshes —
+these tests re-check the reported summary and pin the scenario coverage.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(module, *args, env_extra=None, timeout=1800):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, "-m", module, *args],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        cwd=_REPO,
+        env=env,
+    )
+
+
+@pytest.fixture(scope="module")
+def selftest_output():
+    proc = _run("repro.service.sharded_selftest", "4")
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT_JSON:")]
+    assert line, proc.stdout[-4000:]
+    return json.loads(line[-1][len("RESULT_JSON:") :])
+
+
+def test_parity_across_1_2_4_devices(selftest_output):
+    assert selftest_output["n_devices"] == 4
+    assert selftest_output["device_counts"] == [1, 2, 4]
+    for name, case in selftest_output["cases"].items():
+        assert case["parity"], name
+
+
+def test_every_terminal_status_is_covered(selftest_output):
+    cases = selftest_output["cases"]
+    assert cases["converged_midflight"]["statuses"] == ["converged"]
+    assert "capacity" in cases["evicted"]["statuses"]  # store-saturation evict
+    assert cases["max_iters"]["statuses"] == ["max_iters"]
+
+
+def test_midflight_admission_exercised(selftest_output):
+    assert selftest_output["cases"]["converged_midflight"]["midflight_admissions"] > 0
+
+
+def test_problem_migration_fires_on_real_rings(selftest_output):
+    migrations = selftest_output["cases"]["rebalanced"]["migrations"]
+    assert migrations["1"] == 0  # nothing to pair with
+    assert migrations["2"] > 0 and migrations["4"] > 0, migrations
+
+
+# --- CLI fail-fast validation (launch.serve_quad) ------------------------------
+
+
+def test_cli_rejects_oversized_batch_slots():
+    """--batch-slots beyond what the region store's memory allows must fail
+    fast with an actionable message, not die inside XLA allocation."""
+    proc = _run(
+        "repro.launch.serve_quad",
+        "--batch-slots", str(1 << 22),
+        "--capacity", str(1 << 12),
+        "--n-requests", "1",
+    )
+    assert proc.returncode != 0
+    assert "--batch-slots" in proc.stderr and "GiB" in proc.stderr, proc.stderr[-2000:]
+    assert "Traceback" not in proc.stderr, proc.stderr[-2000:]
+
+
+def test_cli_rejects_indivisible_batch_slots_per_device():
+    proc = _run(
+        "repro.launch.serve_quad",
+        "--batch-slots", "10",
+        "--devices", "4",
+        "--n-requests", "1",
+        env_extra={"XLA_FLAGS": "--xla_force_host_platform_device_count=4"},
+    )
+    assert proc.returncode != 0
+    assert "multiple of" in proc.stderr, proc.stderr[-2000:]
+    assert "Traceback" not in proc.stderr, proc.stderr[-2000:]
+
+
+def test_cli_rejects_more_devices_than_visible():
+    proc = _run(
+        "repro.launch.serve_quad",
+        "--devices", "64",
+        "--batch-slots", "64",
+        "--n-requests", "1",
+    )
+    assert proc.returncode != 0
+    assert "devices" in proc.stderr, proc.stderr[-2000:]
+    assert "Traceback" not in proc.stderr, proc.stderr[-2000:]
