@@ -1,0 +1,110 @@
+"""Full-iteration (eval + advance) cost vs active count: full vs windowed.
+
+The tentpole claim of the windowed-advance refactor: PR 1 made rule
+*evaluation* scale with the live population, but every driver still paid
+full-capacity cost in the advance stage — an O(C log C) argsort plus seven
+(C, d)-shaped gathers per iteration, and O(C) classify/global reductions.
+This benchmark times one complete iteration (windowed eval + windowed
+advance vs full eval + full advance) so the end-to-end speedup of the
+active-window ladder is measured, not just its eval half.
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def _timeit(fn, state, reps: int) -> float:
+    fn(state).est.block_until_ready()  # warmup / compile
+    t0 = time.time()
+    for _ in range(reps):
+        fn(state).est.block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def run(fast: bool = True):
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import region_store
+    from repro.core.adaptive import (
+        advance_ladder,
+        advance_target,
+        make_advance_step,
+        make_eval_step,
+    )
+    from repro.core.config import QuadratureConfig
+    from repro.core.rules import make_rule
+
+    d = 5
+    capacities = [1 << 13] if fast else [1 << 13, 1 << 14]
+    reps = 3 if fast else 10
+    rng = np.random.default_rng(0)
+    out = []
+    for capacity in capacities:
+        cfg = QuadratureConfig(d=d, integrand="f4", capacity=capacity).validate()
+        rule = make_rule(cfg)
+        ladder = region_store.window_ladder(capacity, cfg.eval_window_min)
+        total_volume = 1.0
+        width = np.ones(d)
+
+        def iteration(eval_w, adv_w):
+            ev = make_eval_step(cfg, rule, window=eval_w)
+            adv = make_advance_step(cfg, total_volume, width, window=adv_w)
+            return jax.jit(lambda s: adv(ev(s)))
+
+        full = iteration(None, None)
+
+        for n_active in sorted({64, 256, 1024, capacity // 4}):
+            centers = np.zeros((capacity, d))
+            halfw = np.zeros((capacity, d))
+            centers[:n_active] = rng.uniform(0.2, 0.8, (n_active, d))
+            halfw[:n_active] = rng.uniform(0.01, 0.1, (n_active, d))
+            mask = np.arange(capacity) < n_active
+            state = dataclasses.replace(
+                region_store.empty_state(capacity, d, jnp.float64),
+                centers=jnp.asarray(centers),
+                halfw=jnp.asarray(halfw),
+                active=jnp.asarray(mask),
+                fresh=jnp.asarray(mask),
+            )
+            w_eval = region_store.select_window(ladder, n_active)
+            w_adv = region_store.select_window(
+                advance_ladder(cfg), advance_target(n_active, capacity)
+            )
+            windowed = iteration(w_eval, w_adv)
+            t_full = _timeit(full, state, reps)
+            t_win = _timeit(windowed, state, reps)
+            out.append(
+                {
+                    "d": d,
+                    "capacity": capacity,
+                    "n_active": n_active,
+                    "eval_window": w_eval,
+                    "advance_window": w_adv,
+                    "full_us": t_full * 1e6,
+                    "windowed_us": t_win * 1e6,
+                    "speedup": t_full / t_win,
+                }
+            )
+    from benchmarks._common import save_results
+
+    save_results("iteration_window", out)
+    return out
+
+
+def rows(recs):
+    for r in recs:
+        yield (
+            f"iteration_window/d{r['d']}_C{r['capacity']}_n{r['n_active']}",
+            r["windowed_us"],
+            f"full_us={r['full_us']:.0f};eval_w={r['eval_window']};"
+            f"adv_w={r['advance_window']};speedup={r['speedup']:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=False)):
+        print(",".join(str(x) for x in row))

@@ -21,6 +21,7 @@ def main() -> None:
     from benchmarks import (
         batch_throughput,
         eval_window,
+        iteration_window,
         fig2a_runtime,
         fig2b_accuracy,
         fig3a_feasibility,
@@ -40,6 +41,7 @@ def main() -> None:
         "fig4b": fig4b_idle,
         "kernel": kernel_bench,
         "eval_window": eval_window,
+        "iteration_window": iteration_window,
         "batch_throughput": batch_throughput,
         "sharded_service": sharded_service,
     }

@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing: atomic, async, mesh-reshardable.
 
-Fault-tolerance contract (DESIGN.md §9):
+Fault-tolerance contract (DESIGN.md §6):
 
 - **atomic**: writes go to ``step_XXXXXXXX.tmp/`` and are renamed only after
   the manifest (tree structure + shapes + dtypes + CRC32 per leaf) has been

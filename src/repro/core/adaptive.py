@@ -119,6 +119,43 @@ def eval_ladder(cfg: QuadratureConfig) -> tuple[int, ...]:
     return region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
 
 
+def advance_ladder(cfg: QuadratureConfig) -> tuple[int, ...]:
+    """The advance-window ladder, gated by ``cfg.advance_window``.
+
+    Advance rungs are picked to cover ``min(2 * n_active, capacity)`` — see
+    :func:`advance_target` — because splitting can double the live population
+    and capacity pressure needs the full-capacity rung for its
+    forced-finalise semantics.
+
+    The ladder is the *coarse* (x4-geometric) sub-ladder of the eval ladder,
+    top rung always exactly ``capacity``: any rung covering the target is
+    bit-identical, and the advance at a rung costs far less than the eval at
+    the same rung, so fine granularity buys almost no runtime — while every
+    extra rung is one more traced-and-compiled branch in the ``lax.switch``
+    drivers (device-resident loop, vmapped batch engine), where compile time
+    is a real cost for short-lived engines.
+    """
+    if not cfg.advance_window:
+        return (cfg.capacity,)
+    full = region_store.window_ladder(cfg.capacity, cfg.eval_window_min)
+    return tuple(sorted(full[::-2]))  # top-down every other rung, keeps C
+
+
+def advance_target(n_active, capacity: int):
+    """Row count the advance window must cover for an ``n_active`` population.
+
+    Post-split the population is ``n_act + k`` with
+    ``k = min(n_act, C - n_act)``, i.e. at most ``min(2 * n_active, C)``; and
+    whenever the capacity-pressure path (forced finalise at ``3C//4``, split
+    budget truncation) can bite, ``2 * n_active > C`` already escalates to the
+    full-capacity rung.  Works on ints (host drivers) and traced values
+    (device drivers) alike.
+    """
+    return jnp.minimum(2 * n_active, capacity) if isinstance(
+        n_active, jnp.ndarray
+    ) else min(2 * int(n_active), capacity)
+
+
 def donate_argnums(platform: Optional[str] = None) -> tuple[int, ...]:
     """Donate the state buffers of per-iteration dispatches.
 
@@ -133,7 +170,10 @@ def donate_argnums(platform: Optional[str] = None) -> tuple[int, ...]:
 
 
 def make_advance_step(
-    cfg: QuadratureConfig, total_volume: float, domain_width: np.ndarray
+    cfg: QuadratureConfig,
+    total_volume: float,
+    domain_width: np.ndarray,
+    window: Optional[int] = None,
 ) -> Callable[..., RegionState]:
     """Classify (finalise negligible) + split survivors + compact.
 
@@ -141,27 +181,86 @@ def make_advance_step(
     relative tolerance (the batch service passes per-request tolerances as
     traced values); ``None`` derives them from ``cfg`` as the serial
     drivers do.
+
+    ``window`` runs the whole advance — the global-estimate reduction, the
+    classify thresholding, and the sort-based split/compact — on the leading
+    ``window`` rows only.  Exact (bit-identical to the full advance) whenever
+    ``window >= advance_target(n_active, capacity)``; the drivers guarantee
+    this by picking the rung from :func:`advance_ladder` for the active count
+    they already track.
     """
     width = jnp.asarray(domain_width)
+    w = None if window is None else min(int(window), cfg.capacity)
 
     def advance(state: RegionState, budget=None, rel_tol=None) -> RegionState:
-        integral, _ = state.global_estimates()
+        sl = slice(None) if w is None else slice(0, w)
+        integral, _ = state.global_estimates(window=w)
         fin = classify(
             cfg,
-            state.est,
-            state.err,
-            state.halfw,
-            state.active,
+            state.est[sl],
+            state.err[sl],
+            state.halfw[sl],
+            state.active[sl],
             integral,
             total_volume,
             width,
             budget=budget,
             rel_tol=rel_tol,
         )
-        state = classify_split_compact(state, fin)
+        state = classify_split_compact(state, fin, window=w)
         return dataclasses.replace(state, it=state.it + 1)
 
     return advance
+
+
+def make_switched_advance_step(
+    cfg: QuadratureConfig, total_volume: float, domain_width: np.ndarray
+) -> Callable[..., RegionState]:
+    """Device-resident windowed advance: ``lax.switch`` over the ladder.
+
+    The rung is chosen on device from the live count to cover
+    ``advance_target(n_active)`` — the mirror of the host drivers' cached
+    per-rung jits, for loops that never sync the count
+    (:func:`integrate_device`, the batch engine's fused run).
+    """
+    ladder = advance_ladder(cfg)
+    if len(ladder) == 1:
+        return make_advance_step(cfg, total_volume, domain_width)
+    branches = [
+        make_advance_step(cfg, total_volume, domain_width, window=w)
+        for w in ladder
+    ]
+    rungs = jnp.asarray(ladder, jnp.int32)
+
+    def advance(state: RegionState, budget=None, rel_tol=None) -> RegionState:
+        n = jnp.sum(state.active).astype(jnp.int32)
+        ix = region_store.rung_index(rungs, advance_target(n, cfg.capacity))
+        return jax.lax.switch(ix, branches, state, budget, rel_tol)
+
+    return advance
+
+
+def make_switched_estimates(cfg: QuadratureConfig) -> Callable[[RegionState], tuple]:
+    """Windowed ``global_estimates`` for device-resident loops.
+
+    Any rung covering ``n_active`` is exact (the masked tail contributes
+    exact zeros), so the estimate reductions use the plain count — not the
+    doubled advance target.  Falls back to the full reduction when advance
+    windowing is off.
+    """
+    ladder = advance_ladder(cfg)
+    if len(ladder) == 1:
+        return lambda state: state.global_estimates()
+    branches = [
+        (lambda state, _w=w: state.global_estimates(window=_w)) for w in ladder
+    ]
+    rungs = jnp.asarray(ladder, jnp.int32)
+
+    def estimates(state: RegionState):
+        n = jnp.sum(state.active).astype(jnp.int32)
+        return jax.lax.switch(region_store.rung_index(rungs, n), branches, state)
+
+    return estimates
 
 
 def _setup(cfg: QuadratureConfig, integrand):
@@ -203,10 +302,16 @@ def integrate(
 
     donate = donate_argnums()
     ladder = eval_ladder(cfg)
-    # One jitted eval variant per ladder rung, compiled on first use.  The
-    # host loop already syncs the active count each iteration, so the next
-    # window is known before dispatch and the switch costs nothing on device.
+    adv_ladder = advance_ladder(cfg)
+    C = cfg.capacity
+    # One jitted variant per ladder rung, compiled on first use.  The host
+    # loop already syncs the active count each iteration, so the next window
+    # is known before dispatch and the switch costs nothing on device.  The
+    # advance (and the metric reductions) get the same treatment as the eval:
+    # a per-rung jit cache keyed by the windows the counts demand.
     eval_cache: dict[int, Callable] = {}
+    metrics_cache: dict[int, Callable] = {}
+    adv_cache: dict[int, Callable] = {}
 
     def eval_step_for(n_active: int) -> Callable[[RegionState], RegionState]:
         w = region_store.select_window(ladder, n_active)
@@ -216,25 +321,45 @@ def integrate(
             eval_cache[w] = fn
         return fn
 
-    advance_core = make_advance_step(cfg, total_volume, hi - lo)
+    def metrics_for(n_active: int) -> Callable:
+        # any rung covering n_active reduces the same active mass bit-exactly
+        w = region_store.select_window(adv_ladder, n_active)
+        fn = metrics_cache.get(w)
+        if fn is None:
+            ww = None if w == C else w
 
-    def advance_and_count(state):
-        state = advance_core(state)
-        return state, state.n_active()
+            def metrics(state, _w=ww):
+                integral, error = state.global_estimates(window=_w)
+                act = state.active if _w is None else state.active[:_w]
+                return integral, error, jnp.sum(act)
 
-    advance = jax.jit(advance_and_count, donate_argnums=donate)
+            fn = jax.jit(metrics)
+            metrics_cache[w] = fn
+        return fn
 
-    @jax.jit
-    def metrics(state):
-        integral, error = state.global_estimates()
-        return integral, error, state.n_active()
+    def advance_for(n_active: int) -> Callable:
+        w = region_store.select_window(adv_ladder, advance_target(n_active, C))
+        fn = adv_cache.get(w)
+        if fn is None:
+            ww = None if w == C else w
+            core = make_advance_step(cfg, total_volume, hi - lo, window=ww)
+
+            def advance_and_count(state, _core=core, _w=ww):
+                state = _core(state)
+                # post-split the population fits the advance window
+                act = state.active if _w is None else state.active[:_w]
+                return state, jnp.sum(act)
+
+            fn = jax.jit(advance_and_count, donate_argnums=donate)
+            adv_cache[w] = fn
+        return fn
 
     converged = False
     integral = error = 0.0
     n_active = n_next = cfg.resolved_n_init()
     for _ in range(cfg.max_iters):
         state = eval_step_for(n_next)(state)
-        integral, error, n_active = (float(x) for x in metrics(state))
+        integral, error, n_active = (float(x) for x in metrics_for(n_next)(state))
         if callback is not None:
             callback(int(state.it), integral, error, int(n_active))
         budget = max(cfg.abs_tol, abs(integral) * cfg.rel_tol)
@@ -243,7 +368,7 @@ def integrate(
             break
         if n_active == 0:
             break
-        state, n_dev = advance(state)
+        state, n_dev = advance_for(int(n_active))(state)
         n_next = int(n_dev)
 
     return AdaptiveResult(
@@ -265,17 +390,18 @@ def integrate_device(
     """Fully device-resident driver: lax.while_loop, zero host syncs."""
     cfg, lo, hi, total_volume, rule, state = _setup(cfg, integrand)
     eval_step = make_switched_eval_step(cfg, rule)
-    advance = make_advance_step(cfg, total_volume, hi - lo)
+    advance = make_switched_advance_step(cfg, total_volume, hi - lo)
+    estimates = make_switched_estimates(cfg)
 
     def cond(state: RegionState):
-        integral, error = state.global_estimates()
+        integral, error = estimates(state)
         pending = jnp.any(state.active & state.fresh)
         converged = (error <= error_budget(cfg, integral)) & ~pending
         return (~converged) & (state.it < cfg.max_iters) & jnp.any(state.active)
 
     def body(state: RegionState):
         state = eval_step(state)
-        integral, error = state.global_estimates()
+        integral, error = estimates(state)
         done = error <= error_budget(cfg, integral)
         # Only refine when not converged (cond re-checks next trip).
         return jax.lax.cond(done, lambda s: s, advance, state)

@@ -40,6 +40,16 @@ class QuadratureConfig:
     # of distinct compiled shapes stays at log2(capacity / eval_window_min).
     eval_window: bool = True  # evaluate only the leading active window
     eval_window_min: int = 256  # smallest ladder bucket (power of two)
+    # Window the *advance* stage too (classify thresholding, global-estimate
+    # reductions, and the sort-based split/compact): the argsort and every
+    # gather/scatter run on the smallest ladder rung covering
+    # min(2 * n_active, capacity) — splitting can double the population, and
+    # the capacity-pressure scalars (the 3C/4 forced-finalise limit, the
+    # split budget k = min(n_act, C - n_act)) stay defined against the full
+    # capacity, so trajectories are bit-identical to the full-capacity
+    # advance in every regime (see DESIGN.md §3).  Shares eval_window_min as
+    # the smallest rung.
+    advance_window: bool = True
     # --- batch service -------------------------------------------------------
     # The continuous-batching engine (repro.service) runs ``batch_slots``
     # independent problems of this config's shape in lockstep under vmap; a

@@ -35,7 +35,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import region_store
 from repro.core.adaptive import (
     AdaptiveResult,
+    advance_ladder,
+    advance_target,
     donate_argnums,
+    make_switched_estimates,
     make_switched_eval_step,
 )
 from repro.core.classify import classify, error_budget
@@ -139,6 +142,54 @@ def _stacked_initial_state(cfg: QuadratureConfig, n_devices: int, dtype):
     )
 
 
+def make_switched_classify_split(
+    cfg: QuadratureConfig, total_volume: float, domain_width: np.ndarray
+):
+    """Windowed classify + split/compact for the per-device fused step.
+
+    Unlike :func:`repro.core.adaptive.make_advance_step` this takes the
+    *psum'd* integral and global active count (every device classifies
+    against the same equal-share threshold) and does NOT bump ``it`` — the
+    redistribution schedule indexes on the pre-bump counter.  The window rung
+    is picked per device from its LOCAL live count (the branches contain no
+    collectives, so devices may take different branches under SPMD).
+    """
+    width = jnp.asarray(domain_width)
+    ladder = advance_ladder(cfg)
+    C = cfg.capacity
+
+    def branch(w: Optional[int]):
+        sl = slice(None) if w is None else slice(0, w)
+
+        def fn(state: RegionState, integral, n_global) -> RegionState:
+            fin = classify(
+                cfg,
+                state.est[sl],
+                state.err[sl],
+                state.halfw[sl],
+                state.active[sl],
+                integral,
+                total_volume,
+                width,
+                n_active=n_global,
+            )
+            return classify_split_compact(state, fin, window=w)
+
+        return fn
+
+    if len(ladder) == 1:
+        return branch(None)
+    branches = [branch(w) for w in ladder]
+    rungs = jnp.asarray(ladder, jnp.int32)
+
+    def apply(state: RegionState, integral, n_global) -> RegionState:
+        n = jnp.sum(state.active).astype(jnp.int32)
+        ix = region_store.rung_index(rungs, advance_target(n, C))
+        return jax.lax.switch(ix, branches, state, integral, n_global)
+
+    return apply
+
+
 def make_dist_step(
     cfg: QuadratureConfig,
     rule,
@@ -158,8 +209,9 @@ def make_dist_step(
     applied to the host<->device channel.
     """
     eval_step = make_switched_eval_step(cfg, rule)
+    estimates = make_switched_estimates(cfg)
+    classify_split = make_switched_classify_split(cfg, total_volume, domain_width)
     limit = 3 * cfg.capacity // 4
-    width = jnp.asarray(domain_width)
     dtype = jnp.dtype(cfg.dtype)
 
     def dist_core(state: RegionState):
@@ -167,7 +219,7 @@ def make_dist_step(
         state = eval_step(state)
 
         # --- metadata exchange (the only global sync point) ----------------
-        i_loc, e_loc = state.global_estimates()
+        i_loc, e_loc = estimates(state)
         integral = jax.lax.psum(i_loc, AXIS)
         error = jax.lax.psum(e_loc, AXIS)
         n_loc = jnp.sum(state.active)
@@ -182,18 +234,7 @@ def make_dist_step(
         max_rows, _, _ = balance_stats(n_loc, AXIS, n_devices)
 
         # --- classify + split (global equal-share threshold) ---------------
-        fin = classify(
-            cfg,
-            state.est,
-            state.err,
-            state.halfw,
-            state.active,
-            integral,
-            total_volume,
-            width,
-            n_active=n_global,
-        )
-        state = classify_split_compact(state, fin)
+        state = classify_split(state, integral, n_global)
 
         # --- decentralised redistribution ----------------------------------
         if cfg.redistribution != "off":

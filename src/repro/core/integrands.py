@@ -208,12 +208,21 @@ def _col(theta_leaf, x) -> jnp.ndarray:
     time: a theta of the wrong length would otherwise silently broadcast
     in the integrand while the analytic ``exact`` truncates to d — two
     different problems agreeing on neither.
+
+    Leaves that already carry a broadcast lane axis — ``(d, 1)`` or
+    ``(d, N)`` — pass through unchanged: the Pallas kernel path feeds theta
+    as a per-block ``(d, BLOCK)`` operand ref (closures over theta arrays
+    are rejected by ``pallas_call`` as captured constants).
     """
     arr = jnp.asarray(theta_leaf, x.dtype)
+    if arr.ndim == 2 and arr.shape[0] == x.shape[0] and (
+        arr.shape[1] in (1, x.shape[1])
+    ):
+        return arr
     if arr.shape != (x.shape[0],):
         raise ValueError(
             f"theta leaf has shape {arr.shape}, expected ({x.shape[0]},) "
-            f"for a d={x.shape[0]} problem"
+            f"(or a broadcast ({x.shape[0]}, N)) for a d={x.shape[0]} problem"
         )
     return arr[:, None]
 

@@ -16,10 +16,13 @@ population keeps the active slots contiguous in ``[0, n_active)``:
 ``init_state`` fills the leading slots, ``classify_split_compact`` compacts
 survivors to the front and appends children directly after them, and
 ``redistribution.redistribute`` only retires or splices the tail of the
-occupied block.  The adaptive drivers exploit this to evaluate the rule on a
-leading *window* of the SoA arrays sized from a geometric ladder
-(:func:`window_ladder` / :func:`select_window`) instead of all ``capacity``
-slots, so per-iteration cost scales with the live population.
+occupied block.  The adaptive drivers exploit this to run the *whole
+iteration* — rule evaluation, classification/global reductions, and the
+sort-based split/compact advance — on a leading *window* of the SoA arrays
+sized from a geometric ladder (:func:`window_ladder` / :func:`select_window`)
+instead of all ``capacity`` slots, so per-iteration cost scales with the live
+population (the advance stage needs ``window >= min(2 * n_active, capacity)``
+because splitting can double the population; see DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -78,11 +81,21 @@ class RegionState:
     def n_active(self) -> jnp.ndarray:
         return jnp.sum(self.active)
 
-    def global_estimates(self) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """(integral, error) combining finalised + active contributions."""
-        act = self.active
-        integral = self.fin_integral + jnp.sum(jnp.where(act, self.est, 0.0))
-        error = self.fin_error + jnp.sum(jnp.where(act, self.err, 0.0))
+    def global_estimates(
+        self, window: int | None = None
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(integral, error) combining finalised + active contributions.
+
+        ``window`` reduces over the leading rows only — exact whenever every
+        active slot sits inside the window, which the active-window invariant
+        guarantees for any ``window >= n_active`` (the masked tail contributes
+        exact zeros, so the windowed and full reductions agree bitwise).
+        """
+        act = self.active if window is None else self.active[:window]
+        est = self.est if window is None else self.est[:window]
+        err = self.err if window is None else self.err[:window]
+        integral = self.fin_integral + jnp.sum(jnp.where(act, est, 0.0))
+        error = self.fin_error + jnp.sum(jnp.where(act, err, 0.0))
         return integral, error
 
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.core import gauss_kronrod, genz_malik
 from repro.core.config import QuadratureConfig
 from repro.core.error import two_level_error
-from repro.core.integrands import get as get_integrand
+from repro.core.integrands import get as get_integrand, parse_spec
 
 
 class Rule(Protocol):
@@ -32,19 +32,29 @@ def _select_axis(diffs: jnp.ndarray, halfw: jnp.ndarray) -> jnp.ndarray:
 
 
 class GenzMalikRule:
-    """Degree-7 GM rule + two-level error + fourth-difference axis choice."""
+    """Degree-7 GM rule + two-level error + fourth-difference axis choice.
+
+    ``theta`` switches the rule into ParamIntegrand-family mode: ``integrand``
+    is then a family function ``f(x, theta)`` and theta may be a traced value
+    (the batch service vmaps it over the problem axis).  On the kernel path
+    theta enters ``pallas_call`` as a broadcast operand (see ``kernels.ops``)
+    rather than a closure, which is what makes the fused kernel usable for
+    families at all.
+    """
 
     def __init__(
         self,
         d: int,
-        integrand: Callable[[jnp.ndarray], jnp.ndarray],
+        integrand: Callable[..., jnp.ndarray],
         noise_mult: float = 50.0,
         use_kernel: bool = False,
         interpret: bool = True,
         block_regions: int = 0,  # 0 = kernels.ops.DEFAULT_BLOCK_REGIONS
+        theta=None,
     ):
         self.d = d
         self.f = integrand
+        self.theta = theta
         self.noise_mult = noise_mult
         self.use_kernel = use_kernel
         self.interpret = interpret
@@ -59,11 +69,17 @@ class GenzMalikRule:
                 self.f,
                 centers,
                 halfw,
+                theta=self.theta,
                 interpret=self.interpret,
                 block_regions=self.block_regions,
             )
         else:
-            i7, i5, i3, diffs = genz_malik.gm_eval_reference(self.f, centers, halfw)
+            f = (
+                self.f
+                if self.theta is None
+                else lambda x: self.f(x, self.theta)
+            )
+            i7, i5, i3, diffs = genz_malik.gm_eval_reference(f, centers, halfw)
         vol = jnp.prod(2.0 * halfw, axis=-1)
         maxdiff = jnp.max(diffs, axis=-1)
         err = two_level_error(i7, i5, i3, vol, maxdiff, self.noise_mult)
@@ -105,19 +121,29 @@ class GaussKronrodRule:
         return i_k, err, axis
 
 
-def make_rule(cfg: QuadratureConfig, integrand=None) -> Rule:
-    if cfg.use_kernel and integrand is None and ":" in cfg.integrand:
-        # Family-spec integrands close over theta coefficient arrays, and
-        # pallas_call rejects captured constant arrays ("You should pass
-        # them as inputs") — the same constraint that forced f1/f3/f6 onto
-        # iota-generated coefficients.  Fail with an actionable message
-        # instead of a cryptic trace-time error.
-        raise ValueError(
-            f"integrand {cfg.integrand!r} is a parameterized family, which "
-            "is not supported on the Pallas kernel path (theta arrays would "
-            "be captured constants); set use_kernel=False"
-        )
-    f = integrand if integrand is not None else get_integrand(cfg.integrand).fn
+def make_rule(cfg: QuadratureConfig, integrand=None, theta=None) -> Rule:
+    """Build the configured rule.
+
+    ``integrand`` overrides the config-named integrand with a plain callable
+    ``f(x)``; passing ``theta`` as well marks it a ParamIntegrand family
+    function ``f(x, theta)`` whose coefficients may be traced values (the
+    batch service's per-slot theta).  A config-named family spec (e.g.
+    ``"genz_gaussian:5,5:0.3,0.7"``) on the kernel path is parsed into the
+    same (family fn, theta) pair so the fused kernel receives theta as an
+    operand instead of a rejected captured constant.
+    """
+    if theta is not None and integrand is None:
+        raise ValueError("theta requires an explicit family integrand")
+    if integrand is not None:
+        f = integrand
+    elif cfg.use_kernel and ":" in cfg.integrand:
+        # Family specs close over theta coefficient arrays when bound via
+        # integrands.get(); the kernel path instead feeds theta through the
+        # operand protocol of kernels.ops.genz_malik_eval.
+        family, theta = parse_spec(cfg.integrand)
+        f = family.fn
+    else:
+        f = get_integrand(cfg.integrand).fn
     if cfg.rule == "genz_malik":
         return GenzMalikRule(
             cfg.d,
@@ -126,7 +152,12 @@ def make_rule(cfg: QuadratureConfig, integrand=None) -> Rule:
             use_kernel=cfg.use_kernel,
             interpret=cfg.interpret,
             block_regions=cfg.block_regions,
+            theta=theta,
         )
     if cfg.rule == "gauss_kronrod":
+        if theta is not None:
+            fam_f = f
+            bound_theta = theta
+            f = lambda x: fam_f(x, bound_theta)  # noqa: E731
         return GaussKronrodRule(cfg.d, f)
     raise ValueError(f"unknown rule {cfg.rule!r}")

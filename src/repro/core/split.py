@@ -10,19 +10,64 @@ On GPU the paper fuses filtering and splitting into a single kernel to cut
 data movement; under XLA the whole step is one compiled module, so the fusion
 here is algorithmic (single argsort, single gather) rather than a hand-written
 kernel — see DESIGN.md §2.
+
+**Windowed advance** (DESIGN.md §3).  Both entry points take an optional
+``window`` so the sort, the gathers and the child writes run on the leading
+``window`` rows only, leaving the tail ``[window, capacity)`` out of the
+compiled computation entirely.  The caller owes two guarantees, both free
+under the active-window invariant (every active slot lives in
+``[0, n_active)``):
+
+- every active slot is inside the window (so the sort sees the whole live
+  population and the tail is all-inactive);
+- ``window >= min(2 * n_active, capacity)`` (post-split the population can
+  double, and under capacity pressure the child block extends to exactly
+  ``capacity``).
+
+The capacity-semantics scalars — the ``3C//4`` forced-finalise limit and the
+split budget ``k = min(n_act, C - n_act)`` — stay defined against the FULL
+capacity ``C``, never the window: whenever they could bite (``n_act > C/2``),
+the second guarantee already forces the full-capacity window, so a windowed
+advance is bit-identical to the legacy full one in every regime (argsort is
+stable, so survivors order identically; freed-slot *garbage* may land in
+different slots, but garbage is never re-exposed — every slot that becomes
+active is overwritten with child data first).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.core.region_store import RegionState
 
 
+def survivor_sort_perm(err: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Permutation compacting active slots to the front by descending error.
+
+    The single source of truth for the compaction order, shared by
+    :func:`classify_split_compact` and :func:`compact`: survivors sort by
+    descending error estimate, freed/inactive slots sink to the back (stable,
+    so equal keys — and the inactive block — keep their relative order; the
+    windowed and full-capacity sorts therefore agree on every live slot).
+    """
+    big = jnp.asarray(jnp.finfo(err.dtype).max, err.dtype)
+    return jnp.argsort(jnp.where(active, -err, big))
+
+
+def _window(state: RegionState, window: Optional[int]) -> int:
+    w = state.capacity if window is None else int(window)
+    if not 0 < w <= state.capacity:
+        raise ValueError(f"window {w} outside (0, {state.capacity}]")
+    return w
+
+
 def classify_split_compact(
-    state: RegionState, finalize_mask: jnp.ndarray
+    state: RegionState,
+    finalize_mask: jnp.ndarray,
+    window: Optional[int] = None,
 ) -> RegionState:
     """Apply the classifier verdict, then split every surviving region.
 
@@ -30,27 +75,30 @@ def classify_split_compact(
     split; the rest stay active-but-unsplit (their estimates remain valid,
     they are split on a later iteration).  ``overflowed`` records that
     pressure was ever hit — this is the feasibility limit of Fig. 3a.
+
+    ``finalize_mask`` must have shape ``(window,)`` (``(capacity,)`` when
+    ``window`` is ``None``); ``window`` obligations are in the module
+    docstring.
     """
     C = state.capacity
-    fin = finalize_mask & state.active
-    fin_integral = state.fin_integral + jnp.sum(jnp.where(fin, state.est, 0.0))
-    fin_error = state.fin_error + jnp.sum(jnp.where(fin, state.err, 0.0))
-    active = state.active & ~fin
+    w = _window(state, window)
+    act_w = state.active[:w]
+    fin = finalize_mask & act_w
+    fin_integral = state.fin_integral + jnp.sum(jnp.where(fin, state.est[:w], 0.0))
+    fin_error = state.fin_error + jnp.sum(jnp.where(fin, state.err[:w], 0.0))
+    active = act_w & ~fin
 
-    # Sort key: survivors by descending error first, then freed/inactive slots.
-    big = jnp.asarray(jnp.finfo(state.err.dtype).max, state.err.dtype)
-    key = jnp.where(active, -state.err, big)
-    perm = jnp.argsort(key)
+    perm = survivor_sort_perm(state.err[:w], active)
 
-    centers = state.centers[perm]
-    halfw = state.halfw[perm]
-    est = state.est[perm]
-    err = state.err[perm]
-    axis = state.axis[perm]
+    centers = state.centers[:w][perm]
+    halfw = state.halfw[:w][perm]
+    est = state.est[:w][perm]
+    err = state.err[:w][perm]
+    axis = state.axis[:w][perm]
     active = active[perm]
 
     n_act = jnp.sum(active)
-    idx = jnp.arange(C)
+    idx = jnp.arange(w)
 
     # Graceful degradation under memory pressure (the paper's Fig. 3a
     # feasibility limit): if the store is nearly full, force-finalise the
@@ -58,7 +106,9 @@ def classify_split_compact(
     # (conservative) error estimates are folded into the accumulators, so the
     # global bound remains honest; without this, a full store deadlocks
     # (n_act == C allows zero splits and the classifier threshold, which
-    # scales as budget/n_act, can no longer finalise anything).
+    # scales as budget/n_act, can no longer finalise anything).  The limit is
+    # a property of the store, not of the window: it can only bite when
+    # n_act > 3C/4, which the window contract escalates to the full rung.
     limit = 3 * C // 4
     forced = active & (idx >= limit)
     fin_integral = fin_integral + jnp.sum(jnp.where(forced, est, 0.0))
@@ -71,7 +121,7 @@ def classify_split_compact(
 
     split_row = idx < k  # rows being split (highest error first)
 
-    onehot = jnp.arange(state.d)[None, :] == axis[:, None]  # (C, d)
+    onehot = jnp.arange(state.d)[None, :] == axis[:, None]  # (w, d)
     h_half = jnp.where(onehot, 0.5 * halfw, halfw)
     # children tile the parent exactly: centres at c -+ h/2 along the axis
     shift = jnp.where(onehot, h_half, 0.0)
@@ -88,7 +138,8 @@ def classify_split_compact(
     # children of the highest-error parents — the redistribution layer sends
     # the tail window, which is then exactly "the largest-error subregions,
     # chosen after sorting" (paper §3) while keeping the block contiguous.
-    dest = jnp.where(split_row, n_act + k - 1 - idx, C)  # C == OOB, dropped
+    # The window contract (w >= n_act + k) keeps every destination in-window.
+    dest = jnp.where(split_row, n_act + k - 1 - idx, w)  # w == OOB, dropped
     centers = centers.at[dest].set(child_b_centers, mode="drop")
     halfw = halfw.at[dest].set(h_half, mode="drop")
 
@@ -98,34 +149,60 @@ def classify_split_compact(
     est = jnp.where(fresh, 0.0, est)
     err = jnp.where(fresh, 0.0, err)
     axis = jnp.where(fresh, 0, axis)
+    fresh = fresh & active
 
+    if w == C:
+        return dataclasses.replace(
+            state,
+            centers=centers,
+            halfw=halfw,
+            est=est,
+            err=err,
+            axis=axis,
+            active=active,
+            fresh=fresh,
+            fin_integral=fin_integral,
+            fin_error=fin_error,
+            overflowed=overflowed,
+        )
+    # Write the window back; the untouched tail is all-inactive (and
+    # fresh-free) by the window contract, so the full-state invariants hold.
     return dataclasses.replace(
         state,
-        centers=centers,
-        halfw=halfw,
-        est=est,
-        err=err,
-        axis=axis,
-        active=active,
-        fresh=fresh & active,
+        centers=state.centers.at[:w].set(centers),
+        halfw=state.halfw.at[:w].set(halfw),
+        est=state.est.at[:w].set(est),
+        err=state.err.at[:w].set(err),
+        axis=state.axis.at[:w].set(axis),
+        active=state.active.at[:w].set(active),
+        fresh=state.fresh.at[:w].set(fresh),
         fin_integral=fin_integral,
         fin_error=fin_error,
         overflowed=overflowed,
     )
 
 
-def compact(state: RegionState) -> RegionState:
-    """Compact actives to the front by descending error (no split)."""
-    big = jnp.asarray(jnp.finfo(state.err.dtype).max, state.err.dtype)
-    key = jnp.where(state.active, -state.err, big)
-    perm = jnp.argsort(key)
+def compact(state: RegionState, window: Optional[int] = None) -> RegionState:
+    """Compact actives to the front by descending error (no split).
+
+    ``window`` restricts the sort/gather to the leading rows; every active
+    slot must already sit inside the window (post-compaction the population
+    cannot grow, so ``window >= n_active`` suffices here).
+    """
+    w = _window(state, window)
+    perm = survivor_sort_perm(state.err[:w], state.active[:w])
+    leaves = dict(
+        centers=state.centers[:w][perm],
+        halfw=state.halfw[:w][perm],
+        est=state.est[:w][perm],
+        err=state.err[:w][perm],
+        axis=state.axis[:w][perm],
+        active=state.active[:w][perm],
+        fresh=state.fresh[:w][perm],
+    )
+    if w == state.capacity:
+        return dataclasses.replace(state, **leaves)
     return dataclasses.replace(
         state,
-        centers=state.centers[perm],
-        halfw=state.halfw[perm],
-        est=state.est[perm],
-        err=state.err[perm],
-        axis=state.axis[perm],
-        active=state.active[perm],
-        fresh=state.fresh[perm],
+        **{k: getattr(state, k).at[:w].set(v) for k, v in leaves.items()},
     )

@@ -3,7 +3,7 @@
 Replayable-by-step: ``batch_for_step(step)`` is a pure function of
 (seed, step, shard), so any host can be replaced after a failure and
 regenerate exactly its shard of the stream (the fault-tolerance contract in
-DESIGN.md §9).  The token stream has learnable low-order structure (a noisy
+DESIGN.md §6).  The token stream has learnable low-order structure (a noisy
 modular-affine walk) so short training runs show a decreasing loss.
 """
 

@@ -46,21 +46,29 @@ from repro.core.genz_malik import (
 def _kernel(
     centers_ref,  # (d, B) VMEM
     halfw_ref,  # (d, B) VMEM
-    i7_ref,  # (1, B)
-    i5_ref,  # (1, B)
-    i3_ref,  # (1, B)
-    diffs_ref,  # (d, B)
-    *,
-    f: Callable[[jnp.ndarray], jnp.ndarray],
+    *refs,  # [theta_ref (n_theta, B)] + i7 (1, B), i5, i3, diffs (d, B)
+    f: Callable[..., jnp.ndarray],
     d: int,
+    has_theta: bool,
 ):
+    if has_theta:
+        # ParamIntegrand families take their per-problem coefficients as a
+        # proper kernel operand: an (n_theta, B) ref whose rows are the
+        # flattened theta leaves broadcast over the lane axis (a closure
+        # over theta would be a captured constant, which pallas_call
+        # rejects — and under the batch service's vmap, a traced value).
+        theta_ref, i7_ref, i5_ref, i3_ref, diffs_ref = refs
+        theta = theta_ref[...]
+    else:
+        i7_ref, i5_ref, i3_ref, diffs_ref = refs
+        theta = None
     c = centers_ref[...]
     h = halfw_ref[...]
     dtype = c.dtype
     w = gm_weights(d)
 
     def feval(x):
-        v = f(x)
+        v = f(x) if theta is None else f(x, theta)
         return v.reshape(1, -1)  # keep 2-D for TPU layout
 
     f0 = feval(c)
@@ -124,6 +132,7 @@ def genz_malik_eval_soa(
     f: Callable,
     centers: jnp.ndarray,  # (d, C) SoA
     halfw: jnp.ndarray,  # (d, C)
+    theta_rows: jnp.ndarray | None = None,  # (n_theta, C) broadcast operand
     *,
     block_regions: int,
     interpret: bool = True,
@@ -133,6 +142,12 @@ def genz_malik_eval_soa(
     ``block_regions`` is required (the batch must already be padded to a
     block multiple): block sizing and padding live in ``kernels.ops``, the
     single source of truth for the default.
+
+    ``theta_rows`` carries a ParamIntegrand family's flattened coefficients
+    as an extra ``(n_theta, C)`` input (each row one scalar broadcast over
+    the lane axis); ``f`` then has signature ``f(x, theta_block)`` with
+    ``theta_block`` the matching ``(n_theta, BLOCK)`` VMEM tile.  Packing
+    and unpacking of the theta pytree live in ``kernels.ops``.
     """
     d, n = centers.shape
     if n % block_regions:
@@ -140,14 +155,22 @@ def genz_malik_eval_soa(
     grid = (n // block_regions,)
     dtype = centers.dtype
 
-    kernel = functools.partial(_kernel, f=f, d=d)
+    kernel = functools.partial(_kernel, f=f, d=d, has_theta=theta_rows is not None)
     row_spec = pl.BlockSpec((d, block_regions), lambda i: (0, i))
     one_spec = pl.BlockSpec((1, block_regions), lambda i: (0, i))
+
+    in_specs = [row_spec, row_spec]
+    operands = [centers, halfw]
+    if theta_rows is not None:
+        in_specs.append(
+            pl.BlockSpec((theta_rows.shape[0], block_regions), lambda i: (0, i))
+        )
+        operands.append(theta_rows)
 
     i7, i5, i3, diffs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[row_spec, row_spec],
+        in_specs=in_specs,
         out_specs=[one_spec, one_spec, one_spec, row_spec],
         out_shape=[
             jax.ShapeDtypeStruct((1, n), dtype),
@@ -156,5 +179,5 @@ def genz_malik_eval_soa(
             jax.ShapeDtypeStruct((d, n), dtype),
         ],
         interpret=interpret,
-    )(centers, halfw)
+    )(*operands)
     return i7[0], i5[0], i3[0], diffs

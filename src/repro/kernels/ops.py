@@ -6,13 +6,23 @@ the region store's AoS ``(B, d)`` layout to the kernel's SoA ``(d, B)``
 layout, pads the batch to the block size, and dispatches to the fused
 Pallas kernel (``interpret=True`` executes the kernel body on CPU — the
 validation mode for this container; on TPU pass ``interpret=False``).
+
+ParamIntegrand families ride the same kernel with their coefficients as a
+proper operand: ``theta`` (a pytree of per-axis coefficient leaves) is
+flattened into an ``(n_theta, B)``-broadcast row matrix and rebuilt into the
+pytree inside the kernel wrapper, so the integrand never closes over a
+theta array (``pallas_call`` rejects captured constants, and the batch
+service passes theta as a traced, vmapped value).
 """
 
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.genz_malik_eval import genz_malik_eval_soa
 
@@ -39,15 +49,41 @@ def block_and_pad(b: int, block_regions: int = 0) -> tuple[int, int]:
     return block, (-b) % block
 
 
+@lru_cache(maxsize=None)
+def _theta_wrapper(f: Callable, treedef, sizes: tuple[int, ...]) -> Callable:
+    """Kernel-side adapter ``f(x, theta_rows) -> f(x, theta_pytree)``.
+
+    Splits the stacked ``(n_theta, BLOCK)`` operand tile back into the
+    family's theta leaves (each a broadcast ``(leaf_len, BLOCK)`` slab the
+    integrand consumes via ``integrands._col``).  Cached so repeated calls
+    hand ``genz_malik_eval_soa`` the *same* function object — its jit cache
+    keys on ``f`` statically, and a fresh closure per call would recompile
+    the kernel every iteration.
+    """
+    splits = tuple(int(s) for s in np.cumsum(sizes)[:-1])
+
+    def f_soa(x: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+        parts = jnp.split(rows, splits, axis=0) if splits else [rows]
+        return f(x, jax.tree.unflatten(treedef, parts))
+
+    return f_soa
+
+
 def genz_malik_eval(
-    f: Callable[[jnp.ndarray], jnp.ndarray],
+    f: Callable,
     centers: jnp.ndarray,  # (B, d) AoS, as stored by RegionState
     halfw: jnp.ndarray,  # (B, d)
     *,
+    theta=None,  # optional ParamIntegrand theta pytree, leaves (leaf_len,)
     block_regions: int = 0,
     interpret: bool = True,
 ):
-    """Fused GM rule evaluation. Returns (i7, i5, i3, diffs[B, d])."""
+    """Fused GM rule evaluation. Returns (i7, i5, i3, diffs[B, d]).
+
+    Without ``theta``, ``f`` maps ``(d, N)`` coordinates to ``(N,)`` values.
+    With ``theta``, ``f`` is a family function ``f(x, theta)`` and the theta
+    leaves enter the kernel as broadcast operand rows (see module docstring).
+    """
     b, d = centers.shape
     block, pad = block_and_pad(b, block_regions)
     ct = centers.T
@@ -56,7 +92,22 @@ def genz_malik_eval(
         ct = jnp.pad(ct, ((0, 0), (0, pad)))
         # halfwidth 1 on padded lanes avoids spurious inf/nan in integrands
         ht = jnp.pad(ht, ((0, 0), (0, pad)), constant_values=1.0)
-    i7, i5, i3, diffs = genz_malik_eval_soa(
-        f, ct, ht, block_regions=block, interpret=interpret
-    )
+    if theta is None:
+        i7, i5, i3, diffs = genz_malik_eval_soa(
+            f, ct, ht, block_regions=block, interpret=interpret
+        )
+    else:
+        leaves, treedef = jax.tree.flatten(theta)
+        leaves = [jnp.asarray(leaf, centers.dtype).reshape(-1) for leaf in leaves]
+        sizes = tuple(int(leaf.shape[0]) for leaf in leaves)
+        rows = jnp.concatenate(leaves)
+        theta_rows = jnp.broadcast_to(rows[:, None], (rows.shape[0], ct.shape[1]))
+        i7, i5, i3, diffs = genz_malik_eval_soa(
+            _theta_wrapper(f, treedef, sizes),
+            ct,
+            ht,
+            theta_rows,
+            block_regions=block,
+            interpret=interpret,
+        )
     return i7[:b], i5[:b], i3[:b], diffs[:, :b].T

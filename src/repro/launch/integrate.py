@@ -38,6 +38,14 @@ def main() -> None:
     ap.add_argument(
         "--eval-window-min", type=int, default=256, help="smallest window ladder rung"
     )
+    ap.add_argument(
+        "--advance-window",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="window the advance stage (classify + split/compact + global "
+        "reductions) as well — bit-identical, scales the whole iteration "
+        "with the live population",
+    )
     ap.add_argument("--max-iters", type=int, default=600)
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--message-cap", type=int, default=512)
@@ -85,6 +93,7 @@ def main() -> None:
         block_regions=args.block_regions,
         eval_window=args.eval_window,
         eval_window_min=args.eval_window_min,
+        advance_window=args.advance_window,
         max_iters=args.max_iters,
         message_cap=args.message_cap,
         redistribution=args.redistribution,

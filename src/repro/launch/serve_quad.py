@@ -35,6 +35,23 @@ def main() -> None:
     ap.add_argument("--batch-slots", type=int, default=16)
     ap.add_argument("--admit-every", type=int, default=1)
     ap.add_argument("--eval-window-min", type=int, default=256)
+    ap.add_argument(
+        "--advance-window",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="window the vmapped advance stage too (bit-identical)",
+    )
+    ap.add_argument(
+        "--use-kernel",
+        action="store_true",
+        help="fused Pallas GM kernel (theta rides as a kernel operand)",
+    )
+    ap.add_argument(
+        "--interpret",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="Pallas interpret mode (keep on for CPU; --no-interpret on TPU)",
+    )
     ap.add_argument("--max-iters", type=int, default=300)
     ap.add_argument("--sync-every", type=int, default=4)
     ap.add_argument(
@@ -79,6 +96,9 @@ def main() -> None:
         batch_slots=args.batch_slots,
         admit_every=args.admit_every,
         eval_window_min=args.eval_window_min,
+        advance_window=args.advance_window,
+        use_kernel=args.use_kernel,
+        interpret=args.interpret,
         max_iters=args.max_iters,
         sync_every=args.sync_every,
         service_devices=args.devices,

@@ -32,13 +32,18 @@ depends on which slot or device hosts it), sharding and migration preserve
 bit-identical results: every terminal ``QuadResult`` — converged, max_iters,
 or evicted — matches the single-device service exactly.
 
-Window discipline: the eval window must be a single static shape per
-dispatch, so each device picks the smallest ladder rung covering the widest
-live slot it owns (``lax.switch`` at the top level, each branch the vmapped
-eval at one rung).  By the active-window invariance argument (any window >=
-n_active is exact) every slot gets bit-identical estimates to its own
-serial run at that rung — there is exactly one compiled executable per
-(d, rule, window-rung), shared across the whole batch.
+Window discipline: each window must be a single static shape per dispatch,
+so each device picks the smallest ladder rung covering the widest live slot
+it owns (``lax.switch`` at the top level, each branch the vmapped op at one
+rung).  By the active-window invariance argument (any window >= n_active is
+exact for eval/reductions, any window >= min(2 * n_active, capacity) for the
+sort-based advance) every slot gets bit-identical estimates and trajectories
+to its own serial run at that rung — there is exactly one compiled
+executable per (d, rule, window-rung), shared across the whole batch.  The
+advance stage (classify + split/compact) and the global-estimate reductions
+are windowed the same way when ``cfg.advance_window`` is on, so the whole
+vmapped iteration scales with the widest live population, not store
+capacity.
 """
 
 from __future__ import annotations
@@ -54,6 +59,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import region_store
 from repro.core.adaptive import (
+    advance_ladder,
+    advance_target,
     donate_argnums,
     eval_ladder,
     make_advance_step,
@@ -177,13 +184,6 @@ class BatchEngine:
         devices=None,
     ):
         cfg = cfg.validate()
-        if cfg.use_kernel:
-            raise ValueError(
-                "the batch engine does not support the Pallas kernel path: "
-                "family integrands close over per-slot theta arrays, which "
-                "pallas_call rejects as captured constants; set "
-                "use_kernel=False (the jnp reference rule vmaps fine)"
-            )
         if family is None:
             family = cfg.integrand.partition(":")[0]
         if isinstance(family, str):
@@ -399,20 +399,50 @@ class BatchEngine:
         cfg = self.cfg
         family = self.family
         total_volume = self._total_volume
+        C = cfg.capacity
         ladder = eval_ladder(cfg)
         rungs = jnp.asarray(ladder, jnp.int32)
+        adv_ladder = advance_ladder(cfg)
+        adv_rungs = jnp.asarray(adv_ladder, jnp.int32)
 
         def eval_branch(window: int):
             def eval_one(regions: RegionState, theta) -> RegionState:
-                rule = make_rule(cfg, lambda x: family.fn(x, theta))
+                # theta rides as a rule operand (not a closure) so the Pallas
+                # kernel path works under vmap — see rules.make_rule
+                rule = make_rule(cfg, family.fn, theta=theta)
                 return make_eval_step(cfg, rule, window=window)(regions)
 
             return jax.vmap(eval_one)
 
         branches = [eval_branch(w) for w in ladder]
 
-        # the serial drivers' advance, vmapped with per-slot traced tolerances
-        advance = jax.vmap(make_advance_step(cfg, total_volume, self._width))
+        # One windowed branch per advance rung, carrying the whole
+        # post-eval tail of the iteration: the global-estimate reductions,
+        # the per-slot budget, and the serial drivers' advance (vmapped with
+        # per-slot traced tolerances).  The rung covers
+        # min(2 * n_active, C) for the widest live slot — any wider window
+        # is bit-identical for the narrower slots, so one shared rung is
+        # exact, and folding the reductions into the same switch keeps the
+        # traced program (and its compile time) proportional to the ladder.
+        def tail_branch(window: int):
+            adv = jax.vmap(
+                make_advance_step(cfg, total_volume, self._width, window=window)
+            )
+
+            def est_one(regions: RegionState):
+                integral, error = regions.global_estimates(window=window)
+                n = jnp.sum(regions.active[:window]).astype(jnp.int32)
+                return integral, error, n
+
+            def fn(regions: RegionState, abs_tol, rel_tol):
+                integral, error, n_active = jax.vmap(est_one)(regions)
+                budget = jnp.maximum(abs_tol, jnp.abs(integral) * rel_tol)
+                advanced = adv(regions, budget, rel_tol)
+                return integral, error, n_active, budget, advanced
+
+            return fn
+
+        tail_branches = [tail_branch(w) for w in adv_ladder]
 
         def iter_fn(state: BatchState):
             live = state.occupied & ~state.done
@@ -423,9 +453,15 @@ class BatchEngine:
             evald = jax.lax.switch(ix, branches, state.regions, state.theta)
             regions = _select_slots(live, evald, state.regions)
 
-            integral, error = jax.vmap(lambda r: r.global_estimates())(regions)
-            budget = jnp.maximum(state.abs_tol, jnp.abs(integral) * state.rel_tol)
-            n_active = jnp.sum(regions.active, axis=1).astype(jnp.int32)
+            if len(adv_ladder) > 1:
+                ixa = region_store.rung_index(adv_rungs, advance_target(widest, C))
+                integral, error, n_active, budget, advanced = jax.lax.switch(
+                    ixa, tail_branches, regions, state.abs_tol, state.rel_tol
+                )
+            else:
+                integral, error, n_active, budget, advanced = tail_branches[0](
+                    regions, state.abs_tol, state.rel_tol
+                )
             converged = error <= budget
             # Capacity pressure is not instantly terminal: the serial driver
             # grinds past overflow and often converges, so an overflowed slot
@@ -449,7 +485,6 @@ class BatchEngine:
             done = state.done | (live & terminal)
             n_new_done = jnp.sum(done & ~state.done).astype(jnp.int32)
 
-            advanced = advance(regions, budget, state.rel_tol)
             regions = _select_slots(state.occupied & ~done, advanced, regions)
             # Serial parity on the counter too: after capturing its final
             # metrics the serial driver still runs (and counts) one advance

@@ -7,9 +7,11 @@ acceptance criterion of the sharded service: every :class:`QuadResult`
 (integral, error, status, iterations, n_evals, admitted_at, finished_at) is
 bit-identical at every device count, for every terminal status —
 ``converged``, ``max_iters`` and ``evicted`` (status ``capacity``) — with
-mid-flight admission exercised, and with the cyclic problem rebalancer both
-on and off (a drain-heavy case asserts it actually migrates).  Prints one
-JSON blob on the last line.
+mid-flight admission exercised, with the cyclic problem rebalancer both
+on and off (a drain-heavy case asserts it actually migrates), and with the
+windowed advance both on (the default) and off — so the sharded service
+provably replays the same trajectories when the whole iteration is
+windowed.  Prints one JSON blob on the last line.
 """
 
 import json
@@ -124,6 +126,14 @@ def main() -> None:
             devices=jax.devices()[: counts[-1]],
         )
         per_count["off"] = _tuples(list(off.serve(make_reqs())))
+        # the windowed advance must be a pure cost change: identical results
+        # with the full-capacity advance, on the biggest mesh
+        adv_off = BatchScheduler(
+            QuadratureConfig(**{**cfg.__dict__, "advance_window": False}),
+            family,
+            devices=jax.devices()[: counts[-1]],
+        )
+        per_count["adv_off"] = _tuples(list(adv_off.serve(make_reqs())))
         ref = per_count[1]
         for key, tuples in per_count.items():
             assert tuples == ref, (

@@ -89,3 +89,101 @@ def test_rule_with_kernel_integrates():
     exact = integrands.get("f4").exact(3)
     assert res.status == "converged"
     assert abs(res.integral - exact) / abs(exact) <= 5e-6
+
+
+# --- ParamIntegrand families through the theta-operand kernel path ------------
+
+
+@pytest.mark.parametrize(
+    "name", ["genz_gaussian", "genz_product_peak", "monomial"]
+)
+@pytest.mark.parametrize("d", [2, 3, 5])
+def test_theta_kernel_matches_ref_families(name, d):
+    """Kernel with theta as an operand vs the jnp oracle with theta closed
+    over — agreement at the repo's kernel/oracle tolerance (the two are
+    separately compiled programs, so last-ulp FMA-contraction differences
+    are expected exactly as for the fixed integrands above)."""
+    rng = np.random.default_rng(d * 10 + len(name))
+    fam = integrands.get_param(name)
+    theta = fam.sample_theta(d, rng)
+    centers, halfw = _random_regions(rng, 192, d, np.float64)
+    i7k, i5k, i3k, dk = ops.genz_malik_eval(
+        fam.fn, centers, halfw, theta=theta, interpret=True
+    )
+    i7r, i5r, i3r, dr = genz_malik_eval_soa_ref(
+        lambda x: fam.fn(x, theta), centers.T, halfw.T
+    )
+    np.testing.assert_allclose(i7k, i7r, rtol=1e-12, atol=1e-300)
+    np.testing.assert_allclose(i5k, i5r, rtol=1e-12, atol=1e-300)
+    np.testing.assert_allclose(i3k, i3r, rtol=1e-12, atol=1e-300)
+    # fourth differences can sit entirely at rounding noise (low-degree
+    # monomials are near-exact for the embedded rules): compare at a
+    # scale-relative tolerance with an eps-level absolute floor
+    np.testing.assert_allclose(
+        dk,
+        dr.T,
+        rtol=1e-8,
+        atol=float(np.max(np.abs(np.asarray(dr)))) * 1e-10 + 1e-14,
+    )
+
+
+def test_make_rule_accepts_family_spec_with_kernel():
+    """The family-spec rejection is gone: the kernel path parses the spec
+    and feeds theta through the operand protocol."""
+    from repro.core.config import QuadratureConfig
+    from repro.core.rules import make_rule
+
+    cfg = QuadratureConfig(
+        d=2, integrand="genz_gaussian:5,5:0.3,0.7", use_kernel=True
+    )
+    rule = make_rule(cfg)
+    assert rule.theta is not None
+    rng = np.random.default_rng(0)
+    centers, halfw = _random_regions(rng, 64, 2, np.float64)
+    est, err, axis = rule.eval_batch(centers, halfw)
+    assert est.shape == (64,)
+    assert np.all(np.asarray(err) >= 0)
+
+
+def test_kernel_family_spec_integrates_to_exact():
+    """End-to-end serial driver on a family spec with the fused kernel."""
+    from repro.core.adaptive import integrate
+    from repro.core.config import QuadratureConfig
+
+    spec = "genz_gaussian:6,4:0.3,0.7"
+    cfg = QuadratureConfig(
+        d=2, integrand=spec, rel_tol=1e-7, capacity=1 << 10, use_kernel=True
+    )
+    res = integrate(cfg)
+    exact = integrands.get(spec).exact(2)
+    assert res.status == "converged"
+    assert abs(res.integral - exact) / abs(exact) <= 5e-7
+
+
+@pytest.mark.parametrize("name", ["genz_gaussian", "genz_product_peak", "monomial"])
+def test_batch_engine_kernel_path_matches_serial(name):
+    """The service's vmapped kernel path is bit-identical to the serial
+    kernel driver (theta through the operand protocol on both sides) — the
+    parity guarantee continuous batching promises, now for use_kernel=True."""
+    from repro.core.adaptive import integrate
+    from repro.core.config import QuadratureConfig
+    from repro.service.api import integrate_batch
+
+    fam = integrands.get_param(name)
+    rng = np.random.default_rng(17)
+    thetas = [fam.sample_theta(2, rng) for _ in range(3)]
+    base = dict(
+        d=2, integrand=name, rel_tol=1e-6, capacity=1 << 9, batch_slots=2,
+        max_iters=80, use_kernel=True,
+    )
+    results = integrate_batch(QuadratureConfig(**base), thetas, fam)
+    for theta, r in zip(thetas, results):
+        spec = name + ":" + ":".join(
+            ",".join(repr(float(v)) for v in theta[k]) for k in fam.theta_fields
+        )
+        serial = integrate(QuadratureConfig(**{**base, "integrand": spec}))
+        assert r.status == serial.status
+        assert r.iterations == serial.iterations
+        assert r.integral == serial.integral
+        assert r.error == serial.error
+        assert r.n_evals == serial.n_evals

@@ -128,15 +128,22 @@ def test_per_request_tolerance_parity_aggressive_classifier():
     assert res.iterations == serial.iterations
 
 
-def test_engine_rejects_kernel_path():
-    with pytest.raises(ValueError, match="kernel"):
-        BatchEngine(_cfg(use_kernel=True))
-    with pytest.raises(ValueError, match="kernel"):
-        integrate(
-            QuadratureConfig(
-                d=2, integrand="genz_gaussian:5,5:0.3,0.7", use_kernel=True
-            )
+def test_engine_accepts_kernel_path():
+    """Families run on the fused kernel path (theta rides as a kernel
+    operand, see kernels.ops) — the old captured-constant rejection is gone.
+    Full kernel-vs-serial bit parity lives in tests/test_kernels.py."""
+    engine = BatchEngine(_cfg(use_kernel=True, batch_slots=2))
+    assert engine.cfg.use_kernel
+    res = integrate(
+        QuadratureConfig(
+            d=2,
+            integrand="genz_gaussian:5,5:0.3,0.7",
+            use_kernel=True,
+            rel_tol=1e-5,
+            capacity=1 << 9,
         )
+    )
+    assert res.status == "converged"
 
 
 def test_stacked_theta_pytree():
