@@ -34,7 +34,15 @@ def main() -> None:
         distributed = case.pop("distributed", n_dev > 1)
         cfg = QuadratureConfig(**case)
         t0 = time.time()
-        if distributed:
+        if cfg.resolved_backend() == "vegas":
+            from repro.mc import integrate_vegas, integrate_vegas_distributed
+
+            if distributed:
+                res = integrate_vegas_distributed(cfg)
+            else:
+                res = integrate_vegas(cfg)
+            extra = {"chi2_dof": res.chi2_dof}
+        elif distributed:
             res = integrate_distributed(cfg)
             extra = {
                 "mean_imbalance": res.mean_imbalance(),

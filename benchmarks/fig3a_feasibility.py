@@ -1,26 +1,51 @@
-"""Fig. 3a analogue: strictest achievable tolerance vs dimension, 1 vs 2
-devices.  The region store is the memory proxy (fixed per-device capacity):
+"""Fig. 3a analogue: strictest achievable tolerance vs dimension.
+
+Cubature runs at 1 and 2 devices (the region store is the memory proxy:
 multi-device execution extends feasibility because capacity scales with
-device count — the paper's central multi-GPU claim."""
+device count — the paper's central multi-GPU claim) **plus the VEGAS
+backend**, so the figure keeps producing points where cubature runs out of
+region store instead of simply dying: past the crossover the strictest
+achievable tolerance belongs to the MC backend (its feasibility is bounded
+by sample budget, not memory).  See ``benchmarks/highdim_feasibility.py``
+for the dedicated high-d crossover sweep.
+"""
 
 from benchmarks._common import run_worker, save_results
 
 TOL_LADDER = (1e-3, 1e-5, 1e-7, 1e-9, 1e-11)
+# MC error shrinks with the square root of the budget: ladder rungs below
+# ~1e-7 would need >1e14 samples, so vegas probes only the reachable rungs
+VEGAS_TOLS = (1e-3, 1e-5)
 
 
-def _strictest(n_dev, name, d, capacity, fast):
-    ladder = TOL_LADDER[: 3 if fast else len(TOL_LADDER)]
-    cases = [
-        dict(
-            integrand=name,
-            d=d,
-            rel_tol=tol,
-            capacity=capacity,
-            max_iters=60 if fast else 150,
-            distributed=n_dev > 1,
-        )
-        for tol in ladder
-    ]
+def _strictest(n_dev, name, d, capacity, fast, backend="cubature"):
+    if backend == "vegas":
+        ladder = VEGAS_TOLS[: 1 if fast else len(VEGAS_TOLS)]
+        cases = [
+            dict(
+                integrand=name,
+                d=d,
+                rel_tol=tol,
+                backend="vegas",
+                mc_samples=8192,
+                mc_max_iters=40 if fast else 100,
+                distributed=False,
+            )
+            for tol in ladder
+        ]
+    else:
+        ladder = TOL_LADDER[: 3 if fast else len(TOL_LADDER)]
+        cases = [
+            dict(
+                integrand=name,
+                d=d,
+                rel_tol=tol,
+                capacity=capacity,
+                max_iters=60 if fast else 150,
+                distributed=n_dev > 1,
+            )
+            for tol in ladder
+        ]
     recs = run_worker({"n_devices": n_dev, "cases": cases})
     best = None
     for r in recs:
@@ -41,18 +66,33 @@ def run(fast: bool = True):
                         "integrand": name,
                         "d": d,
                         "n_devices": n_dev,
+                        "backend": "cubature",
                         "strictest_tol": best,
                         "runs": recs,
                     }
                 )
+            # vegas: device count does not change feasibility (sample
+            # sharding is bit-identical), so one row per (integrand, d)
+            best, recs = _strictest(1, name, d, 1 << 12, fast, backend="vegas")
+            out.append(
+                {
+                    "integrand": name,
+                    "d": d,
+                    "n_devices": 1,
+                    "backend": "vegas",
+                    "strictest_tol": best,
+                    "runs": recs,
+                }
+            )
     save_results("fig3a_feasibility", out)
     return out
 
 
 def rows(recs):
     for r in recs:
+        backend = r.get("backend", "cubature")
         yield (
-            f"fig3a/{r['integrand']}_d{r['d']}_dev{r['n_devices']}",
+            f"fig3a/{r['integrand']}_d{r['d']}_{backend}_dev{r['n_devices']}",
             0.0,
             f"strictest_tol={r['strictest_tol']}",
         )

@@ -28,6 +28,7 @@ def main() -> None:
         fig3b_speedup,
         fig4a_scaling,
         fig4b_idle,
+        highdim_feasibility,
         kernel_bench,
         sharded_service,
     )
@@ -40,6 +41,7 @@ def main() -> None:
         "fig4a": fig4a_scaling,
         "fig4b": fig4b_idle,
         "kernel": kernel_bench,
+        "highdim": highdim_feasibility,
         "eval_window": eval_window,
         "iteration_window": iteration_window,
         "batch_throughput": batch_throughput,

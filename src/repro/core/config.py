@@ -17,6 +17,15 @@ class QuadratureConfig:
     integrand: str = "f4"
     rel_tol: float = 1e-8
     abs_tol: float = 1e-16  # the paper's floor: eps <= max(1e-16, |I| tau_rel)
+    # --- backend selection ----------------------------------------------------
+    # "cubature" runs the deterministic adaptive-subdivision engine (the
+    # paper's reproduction); "vegas" runs the adaptive importance-sampling
+    # Monte Carlo subsystem (repro.mc) whose cost is dimension-independent
+    # per sample — the only feasible regime once the Genz-Malik point count
+    # (2^d + 2d^2 + 2d + 1 per region) explodes; "auto" picks vegas at
+    # d >= auto_backend_dim and cubature below it.
+    backend: str = "cubature"  # "cubature" | "vegas" | "auto"
+    auto_backend_dim: int = 9  # "auto" crossover dimension (see DESIGN.md §7)
     capacity: int = 1 << 14  # fixed SoA region-store capacity per device
     # Initial uniform partition size (power of two).  0 = auto: 2^d clipped to
     # capacity/4 — splitting EVERY axis at least once is required so that a
@@ -100,6 +109,22 @@ class QuadratureConfig:
     # the embedded differences in the asymptotic regime first.  Convergence
     # itself needs no finalisation, so cheap problems are unaffected.
     min_depth_per_axis: int = 2
+    # --- VEGAS backend (repro.mc) ---------------------------------------------
+    # One MC iteration draws ``mc_samples`` stratified samples through the
+    # per-axis importance grid (``mc_bins`` bins per axis), accumulates
+    # per-stratum mean/variance, and refines grid + per-stratum sample
+    # counts.  The sample stream is generated and reduced in ``mc_shards``
+    # fixed independent shards — the unit of multi-device work division —
+    # so estimates are bit-identical at any device count dividing it.
+    mc_samples: int = 8192  # samples per iteration (divisible by mc_shards)
+    mc_bins: int = 64  # importance-grid bins per axis
+    mc_shards: int = 8  # static reduction shards (>= and divisible by devices)
+    mc_warmup: int = 5  # adapt-only iterations excluded from the estimator
+    mc_max_iters: int = 100  # MC iteration cap (cubature keeps max_iters)
+    mc_alpha: float = 0.75  # grid-refinement damping exponent (Lepage alpha)
+    mc_beta: float = 0.75  # stratification count-adaptation exponent (VEGAS+)
+    mc_min_per_cube: int = 4  # floor on samples per stratification hypercube
+    mc_seed: int = 0  # PRNG seed: same seed -> bit-identical estimate
     # --- domain (defaults to the unit cube) -----------------------------------
     domain_lo: tuple = ()
     domain_hi: tuple = ()
@@ -109,6 +134,12 @@ class QuadratureConfig:
 
     def hi(self) -> tuple:
         return self.domain_hi if self.domain_hi else (1.0,) * self.d
+
+    def resolved_backend(self) -> str:
+        """Concrete backend for this problem ("auto" resolves on dimension)."""
+        if self.backend == "auto":
+            return "vegas" if self.d >= self.auto_backend_dim else "cubature"
+        return self.backend
 
     def resolved_n_init(self) -> int:
         if self.n_init:
@@ -150,6 +181,31 @@ class QuadratureConfig:
             raise ValueError(f"unknown rebalance policy {self.rebalance!r}")
         if self.rebalance_cap < 1:
             raise ValueError("rebalance_cap must be >= 1")
+        if self.backend not in ("cubature", "vegas", "auto"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.auto_backend_dim < 1:
+            raise ValueError("auto_backend_dim must be >= 1")
+        if self.mc_shards < 1:
+            raise ValueError("mc_shards must be >= 1")
+        if self.mc_samples < 16 or self.mc_samples % self.mc_shards:
+            raise ValueError(
+                "mc_samples must be >= 16 and divisible by mc_shards "
+                f"(got mc_samples={self.mc_samples}, mc_shards={self.mc_shards})"
+            )
+        if self.mc_bins < 2:
+            raise ValueError("mc_bins must be >= 2")
+        if self.mc_warmup < 1:
+            raise ValueError("mc_warmup must be >= 1 (the estimator needs an "
+                             "adapted grid before accumulating)")
+        if self.mc_max_iters <= self.mc_warmup:
+            raise ValueError("mc_max_iters must exceed mc_warmup")
+        if self.mc_min_per_cube < 2:
+            raise ValueError("mc_min_per_cube must be >= 2 (per-stratum "
+                             "variance needs two samples)")
+        if self.mc_samples < 2 * self.mc_min_per_cube:
+            raise ValueError("mc_samples must cover 2 * mc_min_per_cube")
+        if self.mc_alpha < 0 or self.mc_beta < 0:
+            raise ValueError("mc_alpha / mc_beta must be >= 0")
         if len(self.domain_lo) not in (0, self.d):
             raise ValueError("domain_lo must be empty or length d")
         if len(self.domain_hi) not in (0, self.d):

@@ -4,6 +4,10 @@ Single device:
   PYTHONPATH=src python -m repro.launch.integrate --integrand f4 --d 5 --rel-tol 1e-7
 Distributed (one process, N local devices — same code on a real mesh):
   PYTHONPATH=src python -m repro.launch.integrate --devices 8 --integrand f6 --d 5
+High dimension via the VEGAS Monte Carlo backend (see DESIGN.md §7); a bare
+family name samples a random theta from --theta-seed:
+  PYTHONPATH=src python -m repro.launch.integrate --backend vegas --d 15 \
+      --integrand genz_gaussian --rel-tol 1e-3
 """
 
 import argparse
@@ -47,6 +51,29 @@ def main() -> None:
         "with the live population",
     )
     ap.add_argument("--max-iters", type=int, default=600)
+    ap.add_argument(
+        "--backend",
+        default="cubature",
+        choices=["cubature", "vegas", "auto"],
+        help="cubature (deterministic subdivision), vegas (adaptive "
+        "importance-sampling MC for high d), or auto (picks by dimension)",
+    )
+    ap.add_argument(
+        "--mc-samples", type=int, default=8192, help="vegas samples per iteration"
+    )
+    ap.add_argument(
+        "--mc-iters", type=int, default=100, help="vegas iteration cap"
+    )
+    ap.add_argument(
+        "--mc-seed", type=int, default=0, help="vegas PRNG seed (deterministic)"
+    )
+    ap.add_argument(
+        "--theta-seed",
+        type=int,
+        default=0,
+        help="theta draw for a bare family-name --integrand (e.g. "
+        "'genz_gaussian' without coefficients)",
+    )
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--message-cap", type=int, default=512)
     ap.add_argument(
@@ -77,9 +104,20 @@ def main() -> None:
 
     jax.config.update("jax_enable_x64", True)
 
+    import numpy as np
+
     from repro.core import QuadratureConfig, integrate, integrate_device
     from repro.core.distributed import integrate_distributed
-    from repro.core.integrands import REGISTRY, get
+    from repro.core.integrands import PARAM_REGISTRY, REGISTRY, bind, get
+
+    # A bare family name (no ':'-separated coefficients) samples one theta
+    # deterministically — the ergonomic path for "just integrate a d=15
+    # genz_gaussian"; the bound integrand carries its analytic exact value.
+    bound = None
+    if args.integrand in PARAM_REGISTRY:
+        family = PARAM_REGISTRY[args.integrand]
+        theta = family.sample_theta(args.d, np.random.default_rng(args.theta_seed))
+        bound = bind(family, theta)
 
     cfg = QuadratureConfig(
         d=args.d,
@@ -95,23 +133,42 @@ def main() -> None:
         eval_window_min=args.eval_window_min,
         advance_window=args.advance_window,
         max_iters=args.max_iters,
+        backend=args.backend,
+        mc_samples=args.mc_samples,
+        mc_max_iters=args.mc_iters,
+        mc_seed=args.mc_seed,
         message_cap=args.message_cap,
         redistribution=args.redistribution,
         sync_every=args.sync_every,
     )
-    if args.devices > 1:
-        res = integrate_distributed(cfg)
+    fn = bound.fn if bound is not None else None
+    if cfg.resolved_backend() == "vegas":
+        from repro.mc import integrate_vegas, integrate_vegas_distributed
+
+        if args.devices > 1:
+            res = integrate_vegas_distributed(cfg, fn)
+            print(res.summary())
+            print(f"devices={args.devices} (sample shards split across mesh)")
+        else:
+            res = integrate_vegas(cfg, fn)
+            print(res.summary())
+    elif args.devices > 1:
+        res = integrate_distributed(cfg, fn)
         print(res.summary())
         print(f"devices={res.n_devices} mean_imbalance={res.mean_imbalance():.3f}")
     elif args.device_loop:
-        res = integrate_device(cfg)
+        res = integrate_device(cfg, fn)
         print(res.summary())
     else:
-        res = integrate(cfg)
+        res = integrate(cfg, fn)
         print(res.summary())
-    if args.integrand in REGISTRY or ":" in args.integrand:
+    exact = None
+    if bound is not None:
+        exact = bound.exact(args.d)
+    elif args.integrand in REGISTRY or ":" in args.integrand:
         # fixed registry entries and family specs (e.g. genz_gaussian:5,5:.3,.7)
         exact = get(args.integrand).exact(args.d)
+    if exact is not None:
         rel = abs(res.integral - exact) / max(abs(exact), 1e-300)
         print(f"exact={exact:.15e} true_rel_err={rel:.3e}")
 

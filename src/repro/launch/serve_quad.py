@@ -53,6 +53,22 @@ def main() -> None:
         help="Pallas interpret mode (keep on for CPU; --no-interpret on TPU)",
     )
     ap.add_argument("--max-iters", type=int, default=300)
+    ap.add_argument(
+        "--backend",
+        default="cubature",
+        choices=["cubature", "vegas", "auto"],
+        help="engine pool backing the fleet: deterministic cubature, the "
+        "VEGAS Monte Carlo subsystem (high d), or auto (by dimension)",
+    )
+    ap.add_argument(
+        "--mc-samples", type=int, default=8192, help="vegas samples per iteration"
+    )
+    ap.add_argument(
+        "--mc-iters", type=int, default=100, help="vegas iteration cap"
+    )
+    ap.add_argument(
+        "--mc-seed", type=int, default=0, help="vegas PRNG seed (deterministic)"
+    )
     ap.add_argument("--sync-every", type=int, default=4)
     ap.add_argument(
         "--devices",
@@ -100,16 +116,28 @@ def main() -> None:
         use_kernel=args.use_kernel,
         interpret=args.interpret,
         max_iters=args.max_iters,
+        backend=args.backend,
+        mc_samples=args.mc_samples,
+        mc_max_iters=args.mc_iters,
+        mc_seed=args.mc_seed,
         sync_every=args.sync_every,
         service_devices=args.devices,
         rebalance=args.rebalance,
     )
+    vegas = cfg.resolved_backend() == "vegas"
+    if vegas and args.devices not in (0, 1):
+        raise SystemExit(
+            "--backend vegas serves through a single-device vmapped pool "
+            "(MC parallelism shards samples, not slots — see "
+            "repro.mc.multi_device); drop --devices"
+        )
 
     # Fail fast on fleets the region store cannot accommodate: the stacked
     # store allocates batch_slots x capacity regions up front, so an oversized
     # --batch-slots would otherwise die deep inside XLA allocation (or swap
     # the host to death) instead of telling the operator what to change.
-    need = estimate_state_bytes(cfg, family)
+    # (The vegas pool's state is a few KB of grid edges per slot — no check.)
+    need = 0 if vegas else estimate_state_bytes(cfg, family)
     if need > args.max_state_bytes:
         raise SystemExit(
             f"--batch-slots {args.batch_slots} x --capacity {args.capacity} "
@@ -118,7 +146,11 @@ def main() -> None:
             "--batch-slots or --capacity (or raise --max-state-bytes if the "
             "hardware really has the memory)"
         )
-    n_devices = len(jax.devices()) if args.devices == 0 else args.devices
+    n_devices = (
+        1
+        if vegas
+        else len(jax.devices()) if args.devices == 0 else args.devices
+    )
     if n_devices > len(jax.devices()):
         raise SystemExit(
             f"--devices {args.devices} but only {len(jax.devices())} devices "

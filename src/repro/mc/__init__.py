@@ -1,0 +1,37 @@
+"""VEGAS+ adaptive importance-sampling Monte Carlo backend (DESIGN.md §7).
+
+The high-dimensional counterpart to the deterministic cubature engine in
+:mod:`repro.core`: per-axis importance grids with damped refinement
+(:mod:`repro.mc.grid`), stratified sampling with VEGAS+ per-hypercube count
+adaptation (:mod:`repro.mc.stratified`), a fixed-shape jitted iteration +
+weighted-average estimator with a chi^2/dof guard (:mod:`repro.mc.engine`),
+and bit-identical sample sharding across a device mesh
+(:mod:`repro.mc.multi_device`).  Selected via
+``QuadratureConfig(backend="vegas")`` (or ``"auto"``).
+"""
+
+from repro.mc.engine import (
+    VegasBatchEngine,
+    VegasResult,
+    VegasState,
+    integrate_vegas,
+)
+
+__all__ = [
+    "VegasBatchEngine",
+    "VegasResult",
+    "VegasState",
+    "integrate_vegas",
+    "integrate_vegas_distributed",
+]
+
+
+def __getattr__(name):
+    # Lazy so that ``python -m repro.mc.multi_device`` (the parity selftest,
+    # which must set XLA_FLAGS before the jax backend initialises) does not
+    # trigger runpy's double-import of the module it is about to execute.
+    if name == "integrate_vegas_distributed":
+        from repro.mc.multi_device import integrate_vegas_distributed
+
+        return integrate_vegas_distributed
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

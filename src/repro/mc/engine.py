@@ -1,0 +1,628 @@
+"""VEGAS+ adaptive importance-sampling engine (the repo's second backend).
+
+One MC *iteration* is a single jitted program with fixed shapes (the same
+shape discipline as the cubature engine, DESIGN.md §1):
+
+1. **sample** — ``cfg.mc_samples`` stratified points: the unit cube of
+   uniform coordinates is cut into ``n_strat^d`` hypercubes with adaptive
+   per-cube counts (:mod:`repro.mc.stratified`), and each point is pushed
+   through the per-axis importance grid (:mod:`repro.mc.grid`), picking up
+   the map's Jacobian;
+2. **evaluate** — the integrand (a plain ``f((d, N)) -> (N,)`` callable, a
+   registry entry, or a theta-parameterized family from
+   ``core/integrands.py``) at the mapped points;
+3. **accumulate** — per-stratum sums of ``f·J`` and ``(f·J)^2`` give the
+   iteration estimate ``I_t`` and its variance ``sigma_t^2``; per-axis
+   per-bin sums of ``(f·J)^2`` feed the grid;
+4. **refine** — damped grid refinement + VEGAS+ count reallocation.
+
+Across iterations the estimator is the standard inverse-variance weighted
+average ``I = sum(I_t / s_t^2) / sum(1 / s_t^2)`` with a chi^2/dof guard:
+when the per-iteration estimates are mutually inconsistent (chi^2/dof > 1,
+the classic symptom of an undersampled spike or a discontinuity) the
+reported error is inflated by ``sqrt(chi^2/dof)`` so it stays a covering
+estimate.  The first ``cfg.mc_warmup`` iterations adapt only — their
+estimates are discarded, exactly as in Lepage's reference implementation.
+
+**Sharded reduction layout.**  All sample reductions run in
+``cfg.mc_shards`` fixed independent shards (each shard owns a contiguous
+block of global sample indices and a PRNG key folded from the shard id),
+and the shard partials are combined in a fixed left-to-right scan.  The
+multi-device driver (:mod:`repro.mc.multi_device`) assigns whole shards to
+devices and all-gathers the partials, so its estimates are *bit-identical*
+to the single-device engine at any device count dividing ``mc_shards`` —
+the clean embarrassingly-parallel counterpoint to the region-migration
+story of the cubature backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive import AdaptiveResult
+from repro.core.config import QuadratureConfig
+from repro.core.integrands import (
+    ParamIntegrand,
+    get as get_integrand,
+    get_param,
+)
+from repro.mc import grid as grid_lib, stratified
+
+# A result needs at least this many accumulated (post-warmup) iterations
+# before it may report convergence: with one sample the weighted average has
+# no internal consistency check (chi^2 needs a dof), so a lucky first
+# iteration cannot end the run on an untrustworthy error bar.
+MIN_ACCUMULATED = 2
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "edges",
+        "strat_w",
+        "key",
+        "sum_wi",
+        "sum_w",
+        "sum_wi2",
+        "n_acc",
+        "it",
+        "n_evals",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class VegasState:
+    """Fixed-shape MC state: importance grid + stratification + estimator."""
+
+    edges: jnp.ndarray  # (d, mc_bins + 1) importance-grid edges in [0, 1]
+    strat_w: jnp.ndarray  # (M,) damped per-cube allocation weights
+    key: jnp.ndarray  # PRNG key; advances once per iteration
+    sum_wi: jnp.ndarray  # sum I_t / sigma_t^2 over accumulated iterations
+    sum_w: jnp.ndarray  # sum 1 / sigma_t^2
+    sum_wi2: jnp.ndarray  # sum I_t^2 / sigma_t^2 (chi^2 bookkeeping)
+    n_acc: jnp.ndarray  # int32 accumulated (post-warmup) iterations
+    it: jnp.ndarray  # int32 iterations run (incl. warmup)
+    n_evals: jnp.ndarray  # float — integrand evaluations spent
+
+
+@dataclasses.dataclass
+class VegasResult(AdaptiveResult):
+    """MC result; ``error`` is the chi^2-inflated weighted-average sigma."""
+
+    chi2_dof: float = 0.0
+
+    def summary(self) -> str:
+        return (
+            f"I={self.integral:.15e} eps={self.error:.3e} [{self.status}] "
+            f"iters={self.iterations} evals={self.n_evals:.3g} "
+            f"chi2/dof={self.chi2_dof:.2f}"
+        )
+
+
+def mc_layout(cfg: QuadratureConfig) -> tuple[int, int]:
+    """Static stratification layout ``(n_strat, n_cubes)`` for ``cfg``."""
+    n_strat = stratified.choose_n_strat(
+        cfg.d, cfg.mc_samples, cfg.mc_min_per_cube
+    )
+    return n_strat, n_strat**cfg.d
+
+
+def init_state(cfg: QuadratureConfig) -> VegasState:
+    dtype = jnp.dtype(cfg.dtype)
+    _, m = mc_layout(cfg)
+    return VegasState(
+        edges=grid_lib.uniform_edges(cfg.d, cfg.mc_bins, dtype),
+        strat_w=jnp.full((m,), 1.0 / m, dtype),
+        key=jax.random.PRNGKey(cfg.mc_seed),
+        sum_wi=jnp.zeros((), dtype),
+        sum_w=jnp.zeros((), dtype),
+        sum_wi2=jnp.zeros((), dtype),
+        n_acc=jnp.zeros((), jnp.int32),
+        it=jnp.zeros((), jnp.int32),
+        n_evals=jnp.zeros((), dtype),
+    )
+
+
+def _ordered_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Left-to-right sum over the leading (shard) axis.
+
+    A plain ``jnp.sum`` may be re-associated differently by XLA in the
+    single- and multi-device programs; an explicit scan pins the reduction
+    order so shard partials combine bit-identically in both.
+    """
+    init = jnp.zeros_like(x[0])
+    out, _ = jax.lax.scan(lambda acc, row: (acc + row, None), init, x)
+    return out
+
+
+def make_iterate(
+    cfg: QuadratureConfig,
+    fn: Callable[..., jnp.ndarray],
+    *,
+    has_theta: bool = False,
+    axis_name: Optional[str] = None,
+    n_devices: int = 1,
+) -> Callable:
+    """Build the jittable single-iteration update.
+
+    Returns ``iterate(state[, theta]) -> (state, metrics)`` with metrics
+    ``{integral, error, chi2_dof, n_acc, it_integral, it_sigma}`` — the
+    combined weighted-average estimate (falling back to the current
+    iteration's during warmup) plus the per-iteration values.
+
+    ``axis_name`` switches the shard loop into its multi-device form: each
+    device runs ``mc_shards / n_devices`` shards and the partials are
+    all-gathered (in device = shard order) before the fixed-order combine,
+    which keeps the result bit-identical to the single-device engine.
+    """
+    cfg = cfg.validate()
+    d = cfg.d
+    nb = cfg.mc_bins
+    n_strat, M = mc_layout(cfg)
+    N = cfg.mc_samples
+    S = cfg.mc_shards
+    Ns = N // S
+    dtype = jnp.dtype(cfg.dtype)
+    lo = jnp.asarray(cfg.lo(), dtype)
+    width = jnp.asarray(cfg.hi(), dtype) - lo
+    volume = jnp.prod(width)
+    if axis_name is not None and S % n_devices:
+        raise ValueError(
+            f"mc_shards={S} must be divisible by the device count "
+            f"({n_devices}): shards are the unit of multi-device division"
+        )
+    local_shards = S // n_devices
+
+    def shard_accumulate(shard_ix, sub, edges, counts, theta):
+        """All sample work for one shard: returns per-cube and per-bin
+        partial sums, bitwise a function of (shard_ix, sub, grid, counts)
+        alone."""
+        index = shard_ix * Ns + jnp.arange(Ns, dtype=jnp.int32)
+        skey = jax.random.fold_in(sub, shard_ix)
+        y, cube = stratified.sample_y(skey, counts, index, n_strat, d, dtype)
+        x01, jac = grid_lib.apply_map(edges, y)
+        x = lo[:, None] + width[:, None] * x01
+        val = fn(x, theta) if has_theta else fn(x)
+        w = val.astype(dtype) * jac * volume
+        w2 = w * w
+        s1 = jax.ops.segment_sum(w, cube, num_segments=M)
+        s2 = jax.ops.segment_sum(w2, cube, num_segments=M)
+        b = grid_lib.bin_index(y, nb)  # (d, Ns)
+        flat = (jnp.arange(d, dtype=jnp.int32)[:, None] * nb + b).reshape(-1)
+        g = jax.ops.segment_sum(
+            jnp.broadcast_to(w2, (d, Ns)).reshape(-1), flat, num_segments=d * nb
+        )
+        return s1, s2, g
+
+    def iterate(state: VegasState, theta=None):
+        key, sub = jax.random.split(state.key)
+        counts = stratified.allocate_counts(
+            state.strat_w, N, cfg.mc_min_per_cube
+        )
+        if axis_name is None:
+            shard_ids = jnp.arange(S, dtype=jnp.int32)
+        else:
+            base = jax.lax.axis_index(axis_name) * local_shards
+            shard_ids = base.astype(jnp.int32) + jnp.arange(
+                local_shards, dtype=jnp.int32
+            )
+        partials = jax.vmap(
+            shard_accumulate, in_axes=(0, None, None, None, None)
+        )(shard_ids, sub, state.edges, counts, theta)
+        if axis_name is not None:
+            # device order == shard order, so the gathered (S, ...) arrays
+            # are exactly what the single-device vmap produces
+            partials = jax.tree.map(
+                lambda a: jax.lax.all_gather(a, axis_name, axis=0, tiled=True),
+                partials,
+            )
+        s1, s2, g = (_ordered_sum(p) for p in partials)
+
+        nk = counts.astype(dtype)
+        mean = s1 / nk
+        i_t = jnp.sum(mean) / M
+        var_k = jnp.maximum(s2 / nk - mean * mean, 0.0)
+        sig2_t = jnp.sum(var_k / (nk - 1.0)) / (M * M)
+        # round-off floor: an exactly-representable integrand (zero sample
+        # variance) must not produce an infinite weight
+        eps = jnp.finfo(dtype).eps
+        sig2_t = jnp.maximum(sig2_t, (eps * (jnp.abs(i_t) + 1e-30)) ** 2)
+
+        # --- adapt -----------------------------------------------------------
+        edges = grid_lib.refine(state.edges, g.reshape(d, nb), cfg.mc_alpha)
+        strat_w = stratified.adapt_weights(state.strat_w, var_k, cfg.mc_beta)
+
+        # --- accumulate the weighted-average estimator -----------------------
+        acc = state.it >= cfg.mc_warmup
+        inv = jnp.where(acc, 1.0 / sig2_t, 0.0)
+        sum_w = state.sum_w + inv
+        sum_wi = state.sum_wi + i_t * inv
+        sum_wi2 = state.sum_wi2 + i_t * i_t * inv
+        n_acc = state.n_acc + acc.astype(jnp.int32)
+
+        have = n_acc > 0
+        safe_w = jnp.where(have, sum_w, 1.0)
+        integral = jnp.where(have, sum_wi / safe_w, i_t)
+        sigma = jnp.where(have, jnp.sqrt(1.0 / safe_w), jnp.sqrt(sig2_t))
+        chi2 = jnp.maximum(sum_wi2 - sum_wi * sum_wi / safe_w, 0.0)
+        dof = jnp.maximum(n_acc - 1, 1).astype(dtype)
+        chi2_dof = jnp.where(n_acc > 1, chi2 / dof, jnp.zeros((), dtype))
+        error = sigma * jnp.sqrt(jnp.maximum(1.0, chi2_dof))
+
+        new_state = VegasState(
+            edges=edges,
+            strat_w=strat_w,
+            key=key,
+            sum_wi=sum_wi,
+            sum_w=sum_w,
+            sum_wi2=sum_wi2,
+            n_acc=n_acc,
+            it=state.it + 1,
+            n_evals=state.n_evals + jnp.asarray(float(N), dtype),
+        )
+        metrics = {
+            "integral": integral,
+            "error": error,
+            "chi2_dof": chi2_dof,
+            "n_acc": n_acc,
+            "it_integral": i_t,
+            "it_sigma": jnp.sqrt(sig2_t),
+        }
+        return new_state, metrics
+
+    return iterate
+
+
+def _resolve_serial_fn(
+    cfg: QuadratureConfig, integrand: Optional[Callable]
+) -> Callable:
+    """Integrand for the serial drivers: explicit callable wins, else the
+    config-named registry entry / family spec (theta bound in a closure —
+    there is no Pallas-operand constraint on the MC path)."""
+    if integrand is not None:
+        return integrand
+    return get_integrand(cfg.integrand).fn
+
+
+def converged_now(
+    cfg: QuadratureConfig, integral: float, error: float, n_acc: int
+) -> bool:
+    """The shared MC convergence predicate (host loop + batch pool)."""
+    budget = max(cfg.abs_tol, abs(integral) * cfg.rel_tol)
+    return n_acc >= MIN_ACCUMULATED and error <= budget
+
+
+def drive(
+    cfg: QuadratureConfig,
+    iterate: Callable,
+    callback: Optional[Callable[[int, float, float, float], None]] = None,
+) -> VegasResult:
+    """The shared host loop: run ``iterate`` (any jitted form of
+    :func:`make_iterate` — serial or shard_map'd) to convergence or the
+    iteration cap, one scalar sync per iteration."""
+    state = init_state(cfg)
+    integral = error = chi2 = 0.0
+    converged = False
+    for _ in range(cfg.mc_max_iters):
+        state, m = iterate(state)
+        integral, error, chi2, n_acc = (
+            float(m["integral"]),
+            float(m["error"]),
+            float(m["chi2_dof"]),
+            int(m["n_acc"]),
+        )
+        if callback is not None:
+            callback(int(state.it), integral, error, chi2)
+        if converged_now(cfg, integral, error, n_acc):
+            converged = True
+            break
+
+    return VegasResult(
+        integral=integral,
+        error=error,
+        status="converged" if converged else "max_iters",
+        iterations=int(state.it),
+        n_evals=float(state.n_evals),
+        n_active=0,
+        overflowed=False,
+        chi2_dof=chi2,
+    )
+
+
+def integrate_vegas(
+    cfg: QuadratureConfig,
+    integrand: Optional[Callable] = None,
+    callback: Optional[Callable[[int, float, float, float], None]] = None,
+) -> VegasResult:
+    """Host-driven VEGAS loop: one jitted iteration, one scalar sync each.
+
+    Convergence matches the cubature drivers' budget —
+    ``error <= max(abs_tol, |I| * rel_tol)`` — on the weighted-average
+    estimate, with the chi^2-inflated error and a two-iteration minimum so
+    the error bar always has an internal consistency check behind it.
+    """
+    cfg = cfg.validate()
+    fn = _resolve_serial_fn(cfg, integrand)
+    return drive(cfg, jax.jit(make_iterate(cfg, fn)), callback)
+
+
+# --- the service pool: B independent VEGAS problems in lockstep --------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "mc",
+        "theta",
+        "rel_tol",
+        "abs_tol",
+        "occupied",
+        "done",
+        "admit_seq",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class VegasBatchState:
+    """Stacked :class:`VegasState` + per-slot masks (leading (B,) axis)."""
+
+    mc: VegasState
+    theta: Any
+    rel_tol: jnp.ndarray
+    abs_tol: jnp.ndarray
+    occupied: jnp.ndarray
+    done: jnp.ndarray
+    admit_seq: jnp.ndarray  # (B,) int32 admissions seen per slot (keys PRNG)
+
+
+def _select_slots(mask: jnp.ndarray, new, old):
+    def sel(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+class VegasBatchEngine:
+    """MC twin of :class:`repro.service.batch_engine.BatchEngine`.
+
+    Drives ``cfg.batch_slots`` independent VEGAS problems of one integrand
+    family through a vmapped iterate, with the same slot protocol the
+    scheduler speaks (``init`` / ``admit`` / ``release`` / fused ``run``
+    with early exit on a done-flip), so the continuous-batching service
+    admits MC-backed requests through the identical host loop.
+
+    The pool is single-device: MC parallelism lives at the *sample* level
+    (:mod:`repro.mc.multi_device` shards one problem's shards over the
+    mesh), not the slot level — a vmapped fleet already saturates a device,
+    and slots converge on wall-clock-similar schedules (every slot costs
+    ``mc_samples`` evaluations per iteration, unlike cubature's wildly
+    varying live populations).
+    """
+
+    def __init__(
+        self,
+        cfg: QuadratureConfig,
+        family: Union[ParamIntegrand, str, None] = None,
+        mesh=None,
+        devices=None,
+    ):
+        cfg = cfg.validate()
+        if family is None:
+            family = cfg.integrand.partition(":")[0]
+        if isinstance(family, str):
+            family = get_param(family)
+        if mesh is not None or (devices is not None and len(devices) > 1) or (
+            devices is None and mesh is None and cfg.service_devices not in (0, 1)
+        ):
+            raise ValueError(
+                "the vegas service pool is single-device (slots are vmapped); "
+                "MC multi-device parallelism shards samples instead — see "
+                "repro.mc.multi_device.integrate_vegas_distributed"
+            )
+        self.cfg = cfg
+        self.family = family
+        self.n_slots = cfg.batch_slots
+        self.mesh = None
+        self.n_devices = 1
+        self.slots_per_device = self.n_slots
+        self.theta_template = jax.tree.map(
+            lambda x: np.zeros(np.shape(x), np.float64),
+            family.sample_theta(cfg.d, np.random.default_rng(0)),
+        )
+        self._dtype = jnp.dtype(cfg.dtype)
+        self._base_key = jax.random.PRNGKey(cfg.mc_seed)
+        self._viterate = jax.vmap(
+            make_iterate(cfg, family.fn, has_theta=True)
+        )
+        self._run = jax.jit(self._make_run())
+        self._admit = jax.jit(self._make_admit())
+        self._release = jax.jit(self._make_release())
+
+    # --- state ---------------------------------------------------------------
+
+    def init(self) -> VegasBatchState:
+        cfg = self.cfg
+        B = self.n_slots
+        one = init_state(cfg)
+        return VegasBatchState(
+            mc=jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (B,) + x.shape).copy(), one
+            ),
+            theta=jax.tree.map(
+                lambda x: jnp.zeros((B,) + x.shape, self._dtype),
+                self.theta_template,
+            ),
+            rel_tol=jnp.full((B,), cfg.rel_tol, self._dtype),
+            abs_tol=jnp.full((B,), cfg.abs_tol, self._dtype),
+            occupied=jnp.zeros((B,), bool),
+            done=jnp.zeros((B,), bool),
+            admit_seq=jnp.zeros((B,), jnp.int32),
+        )
+
+    def _make_admit(self):
+        fresh = init_state(self.cfg)
+        base_key = self._base_key
+
+        def admit(state: VegasBatchState, slot, theta, rel_tol, abs_tol):
+            seq = state.admit_seq[slot] + 1
+            key = jax.random.fold_in(jax.random.fold_in(base_key, slot), seq)
+            slot_state = dataclasses.replace(fresh, key=key)
+            put = lambda dst, src: dst.at[slot].set(src)
+            return dataclasses.replace(
+                state,
+                mc=jax.tree.map(put, state.mc, slot_state),
+                theta=jax.tree.map(put, state.theta, theta),
+                rel_tol=put(state.rel_tol, rel_tol),
+                abs_tol=put(state.abs_tol, abs_tol),
+                occupied=put(state.occupied, True),
+                done=put(state.done, False),
+                admit_seq=state.admit_seq.at[slot].set(seq),
+            )
+
+        return admit
+
+    def _make_release(self):
+        def release(state: VegasBatchState, slot):
+            return dataclasses.replace(
+                state,
+                occupied=state.occupied.at[slot].set(False),
+                done=state.done.at[slot].set(False),
+            )
+
+        return release
+
+    def admit(
+        self,
+        state: VegasBatchState,
+        slot: int,
+        theta,
+        rel_tol: Optional[float] = None,
+        abs_tol: Optional[float] = None,
+    ) -> VegasBatchState:
+        self._check_slot(slot)
+        got = jax.tree.map(lambda x: np.shape(x), theta)
+        want = jax.tree.map(lambda x: np.shape(x), self.theta_template)
+        if got != want:
+            raise ValueError(
+                f"theta shape mismatch for family {self.family.name!r}: "
+                f"got {got}, want {want}"
+            )
+        cfg = self.cfg
+        return self._admit(
+            state,
+            jnp.asarray(slot, jnp.int32),
+            jax.tree.map(lambda x: jnp.asarray(x, self._dtype), theta),
+            jnp.asarray(cfg.rel_tol if rel_tol is None else rel_tol, self._dtype),
+            jnp.asarray(cfg.abs_tol if abs_tol is None else abs_tol, self._dtype),
+        )
+
+    def release(self, state: VegasBatchState, slot: int) -> VegasBatchState:
+        self._check_slot(slot)
+        return self._release(state, jnp.asarray(slot, jnp.int32))
+
+    def _check_slot(self, slot: int) -> None:
+        if not 0 <= int(slot) < self.n_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.n_slots})")
+
+    # --- the fused dispatch --------------------------------------------------
+
+    def _make_run(self):
+        cfg = self.cfg
+        viterate = self._viterate
+        dtype = self._dtype
+
+        def no_moves():
+            return jnp.full((0, 2), -1, jnp.int32)
+
+        def zero_metrics(B):
+            z = jnp.zeros
+            return {
+                "integral": z((B,), dtype),
+                "error": z((B,), dtype),
+                "n_active": z((B,), jnp.int32),
+                "it": z((B,), jnp.int32),
+                "n_evals": z((B,), dtype),
+                "overflowed": z((B,), bool),
+                "converged": z((B,), bool),
+                "done": z((B,), bool),
+                "occupied": z((B,), bool),
+                "window": z((), jnp.int32),
+            }
+
+        def one_iter(state: VegasBatchState):
+            live = state.occupied & ~state.done
+            new_mc, m = viterate(state.mc, state.theta)
+            mc = _select_slots(live, new_mc, state.mc)
+            budget = jnp.maximum(
+                state.abs_tol, jnp.abs(m["integral"]) * state.rel_tol
+            )
+            converged = (m["error"] <= budget) & (
+                m["n_acc"] >= MIN_ACCUMULATED
+            )
+            capped = mc.it >= cfg.mc_max_iters
+            done = state.done | (live & (converged | capped))
+            n_new = jnp.sum(done & ~state.done).astype(jnp.int32)
+            metrics = {
+                "integral": m["integral"],
+                "error": m["error"],
+                "n_active": jnp.zeros_like(mc.n_acc),
+                "it": mc.it,
+                "n_evals": mc.n_evals,
+                "overflowed": jnp.zeros(state.done.shape, bool),
+                "converged": converged,
+                "done": done,
+                "occupied": state.occupied,
+                "window": jnp.zeros((), jnp.int32),
+            }
+            return dataclasses.replace(state, mc=mc, done=done), metrics, n_new
+
+        def run_body(state: VegasBatchState, max_steps, tick):
+            B = state.occupied.shape[0]
+
+            def one(carry, t):
+                state, stop = carry
+                go = (~stop) & (t < max_steps)
+
+                def do(state):
+                    state, metrics, n_new = one_iter(state)
+                    return state, metrics, no_moves(), n_new > 0
+
+                def skip(state):
+                    return state, zero_metrics(B), no_moves(), jnp.asarray(True)
+
+                state, m, moved, stop = jax.lax.cond(go, do, skip, state)
+                return (state, stop), (m, moved, go)
+
+            (state, _), (ms, moved, executed) = jax.lax.scan(
+                one,
+                (state, jnp.asarray(False)),
+                jnp.arange(cfg.sync_every, dtype=jnp.int32),
+            )
+            return state, ms, executed, moved
+
+        return run_body
+
+    def run(self, state: VegasBatchState, max_steps: int, tick: int):
+        """Same contract as :meth:`BatchEngine.run` (``moved`` is empty)."""
+        return self._run(
+            state,
+            jnp.asarray(min(int(max_steps), self.cfg.sync_every), jnp.int32),
+            jnp.asarray(tick, jnp.int32),
+        )
+
+    def status_of(
+        self, converged: bool, n_active: int, it: int, overflowed: bool
+    ) -> str:
+        """MC terminal taxonomy: no region store, so no capacity/no_active."""
+        if converged:
+            return "converged"
+        if it >= self.cfg.mc_max_iters:
+            return "max_iters"
+        return "running"

@@ -1,0 +1,107 @@
+"""Per-axis VEGAS importance grid: piecewise-linear map + damped refinement.
+
+The grid factorises the importance density as a product of per-axis 1-D
+densities, each represented by ``n_bins`` equal-probability bins over the
+unit interval (the classic VEGAS representation, Lepage 1978/2020): bin
+``b`` of axis ``i`` maps the uniform slice ``[b/nb, (b+1)/nb)`` onto
+``[edges[i, b], edges[i, b+1])``, so narrow bins concentrate samples and
+the map's Jacobian ``nb * (edges[b+1] - edges[b])`` is exactly the
+importance weight the estimator divides by.
+
+Shape discipline (DESIGN.md §1 and §7): the grid is a fixed ``(d,
+n_bins + 1)`` array of edges in ``[0, 1]`` — refinement moves the edges but
+never their count, so every iteration of the MC engine is one XLA program.
+Refinement is *damped* (Lepage's ``alpha`` compression of the per-bin
+weights) so single-iteration noise cannot whipsaw the grid, and the per-bin
+weights are smoothed over neighbours before the rebuild so isolated spikes
+spread to the bins that would catch them next iteration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_edges(d: int, n_bins: int, dtype=jnp.float64) -> jnp.ndarray:
+    """The identity grid: ``(d, n_bins + 1)`` uniformly spaced edges."""
+    e = jnp.linspace(0.0, 1.0, n_bins + 1, dtype=dtype)
+    return jnp.broadcast_to(e, (d, n_bins + 1))
+
+
+def bin_index(y: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Uniform coordinate ``y`` (d, N) in [0, 1) -> owning bin per axis."""
+    return jnp.clip((y * n_bins).astype(jnp.int32), 0, n_bins - 1)
+
+
+def apply_map(edges: jnp.ndarray, y: jnp.ndarray):
+    """Map uniform ``y`` (d, N) through the grid.
+
+    Returns ``(x01, jac)``: the mapped coordinates (d, N) in the unit cube
+    and the total Jacobian ``prod_i nb * w_bin_i`` of shape (N,).  Sampling
+    ``y`` uniformly and weighting by ``jac`` is importance sampling from the
+    grid's product density.
+    """
+    d, nbp1 = edges.shape
+    nb = nbp1 - 1
+    b = bin_index(y, nb)
+    frac = y * nb - b
+    left = jnp.take_along_axis(edges, b, axis=1)
+    right = jnp.take_along_axis(edges, b + 1, axis=1)
+    w = right - left
+    x01 = left + frac * w
+    jac = jnp.prod(nb * w, axis=0)
+    return x01, jac
+
+
+def refine(edges: jnp.ndarray, dsum: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """One damped refinement step from accumulated per-bin weights.
+
+    ``dsum`` (d, n_bins) is the iteration's accumulated importance measure
+    per bin (the engine uses the sum of ``(f * jac)^2`` over samples landing
+    in the bin).  Per axis: smooth over neighbours, normalise, compress with
+    Lepage's damping ``r = ((1 - m) / ln(1/m))^alpha``, then rebuild the
+    edges so every new bin holds equal compressed mass.  An axis with no
+    accumulated mass keeps its current edges.
+    """
+    dtype = edges.dtype
+    d, nbp1 = edges.shape
+    nb = nbp1 - 1
+    dsum = dsum.astype(dtype)
+
+    # neighbour smoothing: (d_{i-1} + 6 d_i + d_{i+1}) / 8, reflective ends
+    left = jnp.concatenate([dsum[:, :1], dsum[:, :-1]], axis=1)
+    right = jnp.concatenate([dsum[:, 1:], dsum[:, -1:]], axis=1)
+    sm = (left + 6.0 * dsum + right) / 8.0
+
+    total = jnp.sum(sm, axis=1, keepdims=True)
+    m = sm / jnp.where(total > 0.0, total, 1.0)
+    # damping: m -> ((1 - m) / ln(1/m))^alpha, continuous limits 0 and 1
+    mc = jnp.clip(m, 1e-99, 1.0 - 1e-15)
+    r = ((1.0 - mc) / -jnp.log(mc)) ** alpha
+    # strictly positive floor: a zero-mass bin must keep nonzero width, else
+    # samples landing in it would map to a zero-measure x-slab (jac = 0) and
+    # silently remove that slab from the integral
+    r = jnp.maximum(r, 1e-10 * jnp.max(r, axis=1, keepdims=True))
+
+    # rebuild: new edge j sits where the cumulative compressed mass crosses
+    # j / nb of the axis total (piecewise-linear inverse CDF over old bins)
+    cr = jnp.concatenate(
+        [jnp.zeros((d, 1), dtype), jnp.cumsum(r, axis=1)], axis=1
+    )  # (d, nb + 1), cr[:, -1] = axis total
+    targets = cr[:, -1:] * (
+        jnp.arange(1, nb, dtype=dtype) / nb
+    )  # (d, nb - 1) interior targets
+    find = jax.vmap(lambda c, t: jnp.searchsorted(c, t, side="right"))
+    k = jnp.clip(find(cr, targets) - 1, 0, nb - 1).astype(jnp.int32)
+    rk = jnp.take_along_axis(r, k, axis=1)
+    frac = (targets - jnp.take_along_axis(cr, k, axis=1)) / rk
+    lo = jnp.take_along_axis(edges, k, axis=1)
+    wi = jnp.take_along_axis(edges, k + 1, axis=1) - lo
+    interior = lo + jnp.clip(frac, 0.0, 1.0) * wi
+    new_edges = jnp.concatenate(
+        [jnp.zeros((d, 1), dtype), interior, jnp.ones((d, 1), dtype)], axis=1
+    )
+    # zero-mass axes (integrand identically zero there so far): keep edges
+    keep = (total <= 0.0) | ~jnp.isfinite(total)
+    return jnp.where(keep, edges, new_edges)

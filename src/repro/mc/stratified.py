@@ -1,0 +1,105 @@
+"""Stratified sample generation + VEGAS+ counts-per-hypercube adaptation.
+
+The unit cube of *uniform* coordinates (the ``y``-space the importance grid
+maps to ``x``) is divided into ``n_strat^d`` congruent hypercubes.  Each
+iteration draws a fixed total of ``n_samples`` points, but the per-cube
+counts adapt: cubes whose integrand (after importance weighting) still has
+high variance receive more of the budget (Lepage 2020's VEGAS+ damped
+``sigma^(2 beta)`` rule), which is what lets the estimator keep shrinking on
+integrands whose structure the separable importance grid cannot represent.
+
+Shape discipline: the sample array is a fixed ``(d, n_samples)`` block;
+dynamic per-cube counts become a *cube-major* assignment — sample ``i``
+belongs to the cube whose cumulative count interval contains ``i``
+(``searchsorted`` over the cumulative counts) — so adaptation changes
+values, never shapes.  Counts are integers allocated by cumulative
+rounding, which conserves the total exactly and keeps every cube at the
+``n_min`` floor (an empty cube would bias the stratified estimator: its
+slab of the domain would simply go missing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def choose_n_strat(d: int, n_samples: int, n_min: int) -> int:
+    """Stratifications per axis: the largest ``n`` whose ``n^d`` hypercubes
+    still leave every cube ``2 * n_min`` samples (half the budget stays
+    free for adaptive reallocation).  Always >= 1; in high dimension this
+    collapses to 1 and stratification gracefully degrades to pure
+    importance sampling."""
+    n = 1
+    while (n + 1) ** d * 2 * n_min <= n_samples:
+        n += 1
+    return n
+
+
+def cube_digits(cube: jnp.ndarray, n_strat: int, d: int) -> jnp.ndarray:
+    """Cube id (N,) -> per-axis stratification indices (d, N), base n_strat."""
+    powers = n_strat ** np.arange(d, dtype=np.int64)  # axis 0 varies fastest
+    return (cube[None, :] // jnp.asarray(powers, cube.dtype)[:, None]) % n_strat
+
+
+def allocate_counts(
+    weights: jnp.ndarray, n_samples: int, n_min: int
+) -> jnp.ndarray:
+    """Integer per-cube counts: ``n_min`` each + the rest ∝ ``weights``.
+
+    Cumulative rounding distributes the ``n_samples - n_min * M`` spare
+    samples: monotone in the cumulative weight, sums to the spare exactly,
+    and never goes negative — so the total is conserved bit-exactly at any
+    weight vector, including degenerate ones (all-zero weights fall back to
+    uniform).
+    """
+    (m,) = weights.shape
+    spare = n_samples - n_min * m
+    total = jnp.sum(weights)
+    w = jnp.where(total > 0.0, weights / jnp.where(total > 0.0, total, 1.0), 1.0 / m)
+    cum = jnp.round(jnp.cumsum(w) * spare).astype(jnp.int32)
+    # force the exact total (guards cumsum round-off in the last entry)
+    cum = cum.at[-1].set(spare)
+    extra = jnp.diff(jnp.concatenate([jnp.zeros((1,), jnp.int32), cum]))
+    return n_min + jnp.maximum(extra, 0)
+
+
+def sample_y(
+    key, counts: jnp.ndarray, index: jnp.ndarray, n_strat: int, d: int, dtype
+):
+    """Stratified uniform coordinates for the samples at ``index``.
+
+    ``index`` (Ns,) are *global* sample indices in ``[0, n_samples)`` —
+    shards pass their own contiguous block, so the cube assignment (and
+    therefore the estimate) is a function of the global index alone, never
+    of how samples are divided across shards or devices.  Returns
+    ``(y, cube)``: coordinates (d, Ns) uniform within each sample's cube,
+    and the owning cube ids (Ns,).
+    """
+    cum = jnp.cumsum(counts)
+    cube = jnp.searchsorted(cum, index, side="right").astype(jnp.int32)
+    digits = cube_digits(cube, n_strat, d).astype(dtype)
+    u = jax.random.uniform(key, (d, index.shape[0]), dtype)
+    # keep y strictly inside the cube so bin_index never rounds across a
+    # stratification boundary
+    u = jnp.clip(u, 0.0, 1.0 - jnp.finfo(dtype).eps)
+    y = (digits + u) / n_strat
+    return y, cube
+
+
+def adapt_weights(
+    old: jnp.ndarray, var_per_cube: jnp.ndarray, beta: float
+) -> jnp.ndarray:
+    """Damped VEGAS+ count weights: ``sigma_k^(2 beta)``, EMA-smoothed.
+
+    The new allocation weight is the per-cube variance measure compressed
+    by ``beta`` (Lepage's damping: beta = 1 is proportional allocation,
+    beta = 0 uniform), normalised, and averaged 50/50 with the previous
+    weights so one noisy iteration cannot starve a cube.
+    """
+    w = jnp.maximum(var_per_cube, 0.0) ** beta
+    total = jnp.sum(w)
+    m = w.shape[0]
+    w = jnp.where(total > 0.0, w / jnp.where(total > 0.0, total, 1.0), 1.0 / m)
+    return 0.5 * old + 0.5 * w

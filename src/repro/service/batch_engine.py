@@ -65,6 +65,7 @@ from repro.core.adaptive import (
     eval_ladder,
     make_advance_step,
     make_eval_step,
+    result_status,
 )
 from repro.core.config import QuadratureConfig
 from repro.core.distributed import _shard_map
@@ -716,6 +717,14 @@ class BatchEngine:
             in_specs=(P(AXIS), P(), P()),
             out_specs=(P(AXIS), P(None, AXIS), P(), P(None, AXIS, None)),
         )
+
+    def status_of(
+        self, converged: bool, n_active: int, it: int, overflowed: bool
+    ) -> str:
+        """Terminal taxonomy for collected slots (scheduler hook; the MC
+        engine pool supplies its own — MC has no region store, so no
+        capacity/no_active statuses)."""
+        return result_status(converged, n_active, it, self.cfg, overflowed)
 
     def run(self, state: BatchState, max_steps: int, tick: int):
         """Up to ``min(max_steps, cfg.sync_every)`` fused iterations.

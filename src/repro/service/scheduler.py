@@ -44,10 +44,31 @@ from typing import Any, Iterable, Iterator, Optional, Union
 import jax
 import numpy as np
 
-from repro.core.adaptive import result_status
 from repro.core.config import QuadratureConfig
 from repro.core.integrands import ParamIntegrand
 from repro.service.batch_engine import BatchEngine, BatchState
+
+
+def make_engine(
+    cfg: QuadratureConfig,
+    family: Union[ParamIntegrand, str, None] = None,
+    mesh=None,
+    devices=None,
+):
+    """Engine for ``cfg``'s resolved backend.
+
+    The service fronts two engine pools behind one scheduler protocol
+    (``init``/``admit``/``release``/fused ``run`` + ``status_of``): the
+    deterministic cubature :class:`BatchEngine` and the Monte Carlo
+    :class:`~repro.mc.engine.VegasBatchEngine` — ``backend="auto"`` picks by
+    the problem dimension, so high-d fleets are admitted through MC instead
+    of being rejected by region-store explosion.
+    """
+    if cfg.resolved_backend() == "vegas":
+        from repro.mc.engine import VegasBatchEngine
+
+        return VegasBatchEngine(cfg, family, mesh=mesh, devices=devices)
+    return BatchEngine(cfg, family, mesh=mesh, devices=devices)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,7 +128,7 @@ class BatchScheduler:
                 )
             self.engine = engine
         else:
-            self.engine = BatchEngine(cfg, family, mesh=mesh, devices=devices)
+            self.engine = make_engine(cfg, family, mesh=mesh, devices=devices)
         self.cfg = self.engine.cfg
         self.last_stats: dict = {"iterations": 0, "dispatches": 0, "migrations": 0}
 
@@ -233,11 +254,10 @@ class BatchScheduler:
                     req_id=req_id,
                     integral=float(ms["integral"][k - 1][slot]),
                     error=float(ms["error"][k - 1][slot]),
-                    status=result_status(
+                    status=engine.status_of(
                         bool(ms["converged"][k - 1][slot]),
                         int(ms["n_active"][k - 1][slot]),
                         int(ms["it"][k - 1][slot]),
-                        cfg,
                         bool(ms["overflowed"][k - 1][slot]),
                     ),
                     iterations=int(ms["it"][k - 1][slot]),
