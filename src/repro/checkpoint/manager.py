@@ -47,6 +47,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # -- save -----------------------------------------------------------------
 
@@ -59,8 +60,20 @@ class CheckpointManager:
         if blocking:
             self._write(step, host)
         else:
-            self._thread = threading.Thread(target=self._write, args=(step, host))
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host)
+            )
             self._thread.start()
+
+    def _write_guarded(self, step: int, host) -> None:
+        # A bare thread target swallows exceptions: a failed async write
+        # (disk full, the FileExistsError re-save guard, a permissions
+        # error) would otherwise leave the caller believing the checkpoint
+        # landed.  Capture and surface on the next wait()/save().
+        try:
+            self._write(step, host)
+        except BaseException as exc:  # noqa: BLE001 - resurfaced in wait()
+            self._error = exc
 
     def _write(self, step: int, host) -> None:
         final = os.path.join(self.dir, f"step_{step:08d}")
@@ -99,9 +112,13 @@ class CheckpointManager:
             os.rmdir(path)
 
     def wait(self) -> None:
+        """Join a pending async save; re-raise its exception if it failed."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise exc
 
     # -- restore ----------------------------------------------------------------
 

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import region_store
-from repro.core.classify import classify, error_budget
+from repro.core.classify import classify, error_budget, nonfinite_mask
 from repro.core.config import QuadratureConfig
 from repro.core.integrands import get as get_integrand
 from repro.core.region_store import RegionState
@@ -263,6 +263,27 @@ def make_switched_estimates(cfg: QuadratureConfig) -> Callable[[RegionState], tu
     return estimates
 
 
+def quarantine_step(state: RegionState):
+    """Zero + deactivate non-finite regions, recompute global estimates.
+
+    The cold recovery path for the host drivers: jitted on first use, runs
+    at most once per problem (the problem is terminal with status
+    ``nonfinite`` immediately after).  The compaction invariant may be
+    broken by the mid-store deactivations, which is safe exactly because
+    nothing windowed runs afterwards — the full-store reduction here is the
+    problem's last device op.
+    """
+    bad = nonfinite_mask(state.est, state.err, state.active)
+    state = dataclasses.replace(
+        state,
+        est=jnp.where(bad, 0.0, state.est),
+        err=jnp.where(bad, 0.0, state.err),
+        active=state.active & ~bad,
+    )
+    integral, error = state.global_estimates()
+    return state, integral, error, jnp.sum(state.active)
+
+
 def _setup(cfg: QuadratureConfig, integrand):
     cfg = cfg.validate()
     lo = np.asarray(cfg.lo(), np.float64)
@@ -277,10 +298,23 @@ def _setup(cfg: QuadratureConfig, integrand):
 
 
 def result_status(
-    converged: bool, n_active: int, it: int, cfg, overflowed: bool
+    converged: bool,
+    n_active: int,
+    it: int,
+    cfg,
+    overflowed: bool,
+    nonfinite: bool = False,
 ) -> str:
     """Terminal-status taxonomy shared by the serial drivers and the batch
-    service (which promises 'statuses as in AdaptiveResult')."""
+    service (which promises 'statuses as in AdaptiveResult').
+
+    ``nonfinite`` wins over everything: a quarantined problem's remaining
+    finite regions may happen to satisfy the budget, but the quarantined
+    volume is unaccounted for, so reporting ``converged`` would overstate
+    what the estimate covers.
+    """
+    if nonfinite:
+        return "nonfinite"
     if converged:
         return "converged"
     if overflowed:
@@ -355,6 +389,7 @@ def integrate(
         return fn
 
     converged = False
+    nonfinite = False
     integral = error = 0.0
     n_active = n_next = cfg.resolved_n_init()
     for _ in range(cfg.max_iters):
@@ -362,6 +397,14 @@ def integrate(
         integral, error, n_active = (float(x) for x in metrics_for(n_next)(state))
         if callback is not None:
             callback(int(state.it), integral, error, int(n_active))
+        if not (np.isfinite(integral) and np.isfinite(error)):
+            # an integrand NaN/Inf reached the global reductions: quarantine
+            # the offending regions and stop with the best-effort estimate
+            # of the surviving population (terminal status "nonfinite")
+            state, gi, ge, na = jax.jit(quarantine_step)(state)
+            integral, error, n_active = float(gi), float(ge), int(na)
+            nonfinite = True
+            break
         budget = max(cfg.abs_tol, abs(integral) * cfg.rel_tol)
         if error <= budget:
             converged = True
@@ -375,7 +418,12 @@ def integrate(
         integral=integral,
         error=error,
         status=result_status(
-            converged, int(n_active), int(state.it), cfg, bool(state.overflowed)
+            converged,
+            int(n_active),
+            int(state.it),
+            cfg,
+            bool(state.overflowed),
+            nonfinite,
         ),
         iterations=int(state.it),
         n_evals=float(state.n_evals),
@@ -409,13 +457,21 @@ def integrate_device(
     final = jax.lax.while_loop(cond, body, state)
     integral, error = (float(x) for x in final.global_estimates())
     n_active = int(final.n_active())
+    # the device-resident loop has no recovery path (NaN fails the on-device
+    # convergence check until another bound fires); report honestly
+    nonfinite = not (np.isfinite(integral) and np.isfinite(error))
     budget = max(cfg.abs_tol, abs(integral) * cfg.rel_tol)
     converged = error <= budget
     return AdaptiveResult(
         integral=integral,
         error=error,
         status=result_status(
-            converged, n_active, int(final.it), cfg, bool(final.overflowed)
+            converged,
+            n_active,
+            int(final.it),
+            cfg,
+            bool(final.overflowed),
+            nonfinite,
         ),
         iterations=int(final.it),
         n_evals=float(final.n_evals),

@@ -32,6 +32,22 @@ def error_budget(cfg: QuadratureConfig, global_estimate: jnp.ndarray) -> jnp.nda
     return jnp.maximum(cfg.abs_tol, jnp.abs(global_estimate) * cfg.rel_tol)
 
 
+def nonfinite_mask(
+    est: jnp.ndarray, err: jnp.ndarray, active: jnp.ndarray
+) -> jnp.ndarray:
+    """Mask of active regions whose estimates went non-finite.
+
+    A single NaN/Inf region estimate (an integrand pole, an overflowing
+    parameterization, corrupted state) would otherwise poison every global
+    reduction it enters — NaN propagates through the sum, the convergence
+    check ``error <= budget`` is False forever, and the slot grinds to
+    ``max_iters`` while polluting fleet-wide metrics.  Callers quarantine
+    the flagged regions (zero their contributions, deactivate them) and
+    report the slot with the terminal status ``nonfinite`` instead.
+    """
+    return active & ~(jnp.isfinite(est) & jnp.isfinite(err))
+
+
 def classify(
     cfg: QuadratureConfig,
     est: jnp.ndarray,

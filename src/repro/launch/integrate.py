@@ -89,6 +89,13 @@ def main() -> None:
         help="iterations fused per dispatch in the distributed driver",
     )
     ap.add_argument("--device-loop", action="store_true", help="lax.while_loop driver")
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit non-zero unless the result is finite AND converged "
+        "(for scripted runs: a NaN or a max_iters/capacity/nonfinite "
+        "termination must fail the pipeline, not print and exit 0)",
+    )
     args = ap.parse_args()
 
     if args.devices > 1 and os.environ.get("_REPRO_INT_WORKER") != "1":
@@ -171,6 +178,34 @@ def main() -> None:
     if exact is not None:
         rel = abs(res.integral - exact) / max(abs(exact), 1e-300)
         print(f"exact={exact:.15e} true_rel_err={rel:.3e}")
+
+    if args.strict:
+        import math
+
+        problems = []
+        if not (math.isfinite(res.integral) and math.isfinite(res.error)):
+            problems.append(
+                f"non-finite result (integral={res.integral!r}, "
+                f"error={res.error!r})"
+            )
+        if res.status != "converged":
+            hints = {
+                "max_iters": "raise --max-iters (or --mc-iters for vegas), "
+                "or loosen --rel-tol",
+                "capacity": "raise --capacity or loosen --rel-tol",
+                "nonfinite": "the integrand produced NaN/Inf on this domain; "
+                "check the integrand/theta for poles or overflow",
+                "no_active": "the region population collapsed; loosen "
+                "--rel-tol",
+            }
+            hint = hints.get(res.status, "see the status taxonomy in DESIGN.md")
+            problems.append(f"status={res.status!r} (hint: {hint})")
+        if problems:
+            print(
+                "STRICT: " + "; ".join(problems),
+                file=sys.stderr,
+            )
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,12 @@ Shard the fleet across 4 devices with cyclic problem rebalancing:
 Explicit problems (one family spec per --request, see integrands.from_spec):
   PYTHONPATH=src python -m repro.launch.serve_quad --d 2 \
       --request genz_gaussian:5,5:0.3,0.7 --request genz_gaussian:8,2:0.5,0.5
+Graceful degradation + crash recovery (see DESIGN.md §6): re-route degraded
+requests, snapshot every admission tick, resume after a crash:
+  PYTHONPATH=src python -m repro.launch.serve_quad --d 3 --n-requests 64 \
+      --graceful --checkpoint-dir /tmp/quad-ckpt
+  PYTHONPATH=src python -m repro.launch.serve_quad --d 3 --n-requests 64 \
+      --graceful --checkpoint-dir /tmp/quad-ckpt --resume
 """
 
 import argparse
@@ -91,7 +97,49 @@ def main() -> None:
     ap.add_argument(
         "--validate", action="store_true", help="print true error vs analytic exact"
     )
+    ap.add_argument(
+        "--graceful",
+        action="store_true",
+        help="serve through the graceful-degradation layer: capacity/"
+        "nonfinite evictions are re-routed once to the VEGAS pool, "
+        "tolerance-starved requests retried at a loosened tolerance "
+        "(results carry attempt provenance)",
+    )
+    ap.add_argument(
+        "--deadline-s",
+        type=float,
+        default=None,
+        help="per-request wall-clock SLO in seconds (expired slots are "
+        "evicted with a best-effort partial result, status 'deadline')",
+    )
+    ap.add_argument(
+        "--max-evals",
+        type=float,
+        default=None,
+        help="per-request integrand-evaluation SLO (deterministic analogue "
+        "of --deadline-s)",
+    )
+    ap.add_argument(
+        "--checkpoint-dir",
+        default=None,
+        help="directory for service snapshots (engine state + slot map)",
+    )
+    ap.add_argument(
+        "--checkpoint-every",
+        type=int,
+        default=1,
+        help="snapshot every N admission ticks (needs --checkpoint-dir)",
+    )
+    ap.add_argument(
+        "--resume",
+        action="store_true",
+        help="restore the latest snapshot in --checkpoint-dir and replay: "
+        "already-pulled requests are skipped, in-flight slots resume "
+        "mid-refinement (bit-identical for slots the crash did not touch)",
+    )
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     import jax
 
@@ -178,15 +226,36 @@ def main() -> None:
         rng = np.random.default_rng(args.seed)
         thetas = [family.sample_theta(args.d, rng) for _ in range(args.n_requests)]
 
-    requests = [QuadRequest(req_id=i, theta=t) for i, t in enumerate(thetas)]
+    requests = [
+        QuadRequest(
+            req_id=i,
+            theta=t,
+            deadline_s=args.deadline_s,
+            max_evals=args.max_evals,
+        )
+        for i, t in enumerate(thetas)
+    ]
     print(
         f"serving {len(requests)} x {family.name} (d={args.d}) through "
         f"{cfg.batch_slots} slots on {n_devices} device(s) "
         f"(rebalance={cfg.rebalance}), rel_tol={cfg.rel_tol:g}"
     )
+    serve_kwargs = {}
+    if args.checkpoint_dir:
+        from repro.service import ServiceCheckpointer
+
+        serve_kwargs["checkpointer"] = ServiceCheckpointer(args.checkpoint_dir)
+        serve_kwargs["checkpoint_every"] = args.checkpoint_every
     t0 = time.perf_counter()
     n_done = 0
-    for res in serve(cfg, requests, family):
+    for res in serve(
+        cfg,
+        requests,
+        family,
+        graceful=args.graceful,
+        resume=args.resume,
+        **serve_kwargs,
+    ):
         n_done += 1
         line = res.summary()
         if args.validate:

@@ -224,6 +224,27 @@ def make_iterate(
             )
         s1, s2, g = (_ordered_sum(p) for p in partials)
 
+        # --- per-stratum non-finite quarantine -------------------------------
+        # A NaN/Inf integrand value poisons its stratum's partial sums, and
+        # from there the iteration estimate, the weighted-average accumulator
+        # and the grid refinement.  Zero the poisoned strata (and grid bins)
+        # out of the estimate and flag the iteration: the drivers terminate
+        # the problem with status "nonfinite" carrying the best-effort
+        # estimate of the surviving strata.  For finite integrands the masks
+        # are all-False and every where() is a bitwise identity.
+        bad_k = ~(jnp.isfinite(s1) & jnp.isfinite(s2))
+        # corrupted *accumulators* (e.g. a fault-injected slot) are equally
+        # terminal: the weighted average can never recover a finite value
+        bad_acc = ~(
+            jnp.isfinite(state.sum_wi)
+            & jnp.isfinite(state.sum_w)
+            & jnp.isfinite(state.sum_wi2)
+        )
+        nonfinite = jnp.any(bad_k) | bad_acc
+        s1 = jnp.where(bad_k, 0.0, s1)
+        s2 = jnp.where(bad_k, 0.0, s2)
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+
         nk = counts.astype(dtype)
         mean = s1 / nk
         i_t = jnp.sum(mean) / M
@@ -273,6 +294,7 @@ def make_iterate(
             "n_acc": n_acc,
             "it_integral": i_t,
             "it_sigma": jnp.sqrt(sig2_t),
+            "nonfinite": nonfinite,
         }
         return new_state, metrics
 
@@ -309,6 +331,7 @@ def drive(
     state = init_state(cfg)
     integral = error = chi2 = 0.0
     converged = False
+    nonfinite = False
     for _ in range(cfg.mc_max_iters):
         state, m = iterate(state)
         integral, error, chi2, n_acc = (
@@ -319,14 +342,21 @@ def drive(
         )
         if callback is not None:
             callback(int(state.it), integral, error, chi2)
+        if bool(m["nonfinite"]):
+            # poisoned strata were quarantined inside the iterate; the
+            # combined estimate is best-effort, so stop here rather than
+            # keep averaging over a hole in the integrand
+            nonfinite = True
+            break
         if converged_now(cfg, integral, error, n_acc):
             converged = True
             break
 
+    status = "converged" if converged else "max_iters"
     return VegasResult(
         integral=integral,
         error=error,
-        status="converged" if converged else "max_iters",
+        status="nonfinite" if nonfinite else status,
         iterations=int(state.it),
         n_evals=float(state.n_evals),
         n_active=0,
@@ -405,6 +435,8 @@ class VegasBatchEngine:
     ``mc_samples`` evaluations per iteration, unlike cubature's wildly
     varying live populations).
     """
+
+    backend = "vegas"
 
     def __init__(
         self,
@@ -551,6 +583,7 @@ class VegasBatchEngine:
                 "n_evals": z((B,), dtype),
                 "overflowed": z((B,), bool),
                 "converged": z((B,), bool),
+                "nonfinite": z((B,), bool),
                 "done": z((B,), bool),
                 "occupied": z((B,), bool),
                 "window": z((), jnp.int32),
@@ -567,7 +600,8 @@ class VegasBatchEngine:
                 m["n_acc"] >= MIN_ACCUMULATED
             )
             capped = mc.it >= cfg.mc_max_iters
-            done = state.done | (live & (converged | capped))
+            nonfinite = live & m["nonfinite"]
+            done = state.done | (live & (converged | capped)) | nonfinite
             n_new = jnp.sum(done & ~state.done).astype(jnp.int32)
             metrics = {
                 "integral": m["integral"],
@@ -577,6 +611,7 @@ class VegasBatchEngine:
                 "n_evals": mc.n_evals,
                 "overflowed": jnp.zeros(state.done.shape, bool),
                 "converged": converged,
+                "nonfinite": nonfinite,
                 "done": done,
                 "occupied": state.occupied,
                 "window": jnp.zeros((), jnp.int32),
@@ -618,9 +653,16 @@ class VegasBatchEngine:
         )
 
     def status_of(
-        self, converged: bool, n_active: int, it: int, overflowed: bool
+        self,
+        converged: bool,
+        n_active: int,
+        it: int,
+        overflowed: bool,
+        nonfinite: bool = False,
     ) -> str:
         """MC terminal taxonomy: no region store, so no capacity/no_active."""
+        if nonfinite:
+            return "nonfinite"
         if converged:
             return "converged"
         if it >= self.cfg.mc_max_iters:

@@ -15,6 +15,13 @@ Layers (bottom up):
   queue feeding batch slots, mid-flight admission into slots freed by
   converged problems (targeting the device that owns the freed slot),
   eviction of capacity-saturated slots;
+- :mod:`repro.service.routing` — graceful degradation: fallback re-routing
+  of degraded requests (capacity/nonfinite evictions to the VEGAS pool,
+  tolerance-starved requests to a relaxed retry) with attempt provenance;
+- :mod:`repro.service.checkpoint` — service-level snapshot/resume (engine
+  state + slot map) on top of :mod:`repro.checkpoint`;
+- :mod:`repro.service.faults` — deterministic fault injectors, exercised by
+  ``python -m repro.service.chaos_selftest``;
 - :mod:`repro.service.api` — ``integrate_batch`` / ``serve`` entry points.
 
 Results are bit-identical at every device count, for every terminal status.
@@ -22,14 +29,19 @@ Results are bit-identical at every device count, for every terminal status.
 
 from repro.service.api import integrate_batch, serve
 from repro.service.batch_engine import BatchEngine, BatchState
+from repro.service.checkpoint import ServiceCheckpointer
+from repro.service.routing import GracefulScheduler, ReroutePolicy
 from repro.service.scheduler import BatchScheduler, QuadRequest, QuadResult
 
 __all__ = [
     "BatchEngine",
     "BatchScheduler",
     "BatchState",
+    "GracefulScheduler",
     "QuadRequest",
     "QuadResult",
+    "ReroutePolicy",
+    "ServiceCheckpointer",
     "integrate_batch",
     "serve",
 ]

@@ -48,9 +48,32 @@ def serve(
     family: Union[ParamIntegrand, str, None] = None,
     mesh=None,
     devices=None,
+    graceful: bool = False,
+    resume: bool = False,
+    **scheduler_kwargs,
 ) -> Iterator[QuadResult]:
-    """Stream results for an arbitrary request iterable (convergence order)."""
-    return BatchScheduler(cfg, family, mesh=mesh, devices=devices).serve(requests)
+    """Stream results for an arbitrary request iterable (convergence order).
+
+    ``graceful=True`` serves through
+    :class:`~repro.service.routing.GracefulScheduler`: degraded requests
+    (capacity/nonfinite evictions, tolerance-starved retries) are re-routed
+    per the default :class:`~repro.service.routing.ReroutePolicy` instead of
+    being reported as failures.  ``resume=True`` restores the latest service
+    snapshot before serving (requires a ``checkpointer``).  Extra keyword
+    arguments (``checkpointer``, ``checkpoint_every``, ``on_tick``, and for
+    the graceful form ``policy``) pass through to the scheduler.
+    """
+    if graceful:
+        from repro.service.routing import GracefulScheduler
+
+        sched = GracefulScheduler(
+            cfg, family, mesh=mesh, devices=devices, **scheduler_kwargs
+        )
+    else:
+        sched = BatchScheduler(
+            cfg, family, mesh=mesh, devices=devices, **scheduler_kwargs
+        )
+    return sched.serve(requests, resume=resume)
 
 
 def integrate_batch(

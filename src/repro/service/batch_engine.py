@@ -67,6 +67,7 @@ from repro.core.adaptive import (
     make_eval_step,
     result_status,
 )
+from repro.core.classify import nonfinite_mask
 from repro.core.config import QuadratureConfig
 from repro.core.distributed import _shard_map
 from repro.core.integrands import ParamIntegrand, get_param
@@ -454,6 +455,35 @@ class BatchEngine:
             evald = jax.lax.switch(ix, branches, state.regions, state.theta)
             regions = _select_slots(live, evald, state.regions)
 
+            # --- non-finite quarantine ---------------------------------------
+            # A NaN/Inf region estimate (pathological theta, corrupted slot)
+            # must be contained to its own slot BEFORE the global-estimate
+            # reductions run, or it poisons the slot's budget check forever
+            # and — worse — every psum'd fleet metric downstream.  Zero the
+            # offending regions' contributions, deactivate them, and flag the
+            # slot terminal with status "nonfinite".  For healthy slots the
+            # masks are all-False and every where() is a bitwise identity, so
+            # serial parity is untouched.
+            bad = nonfinite_mask(regions.est, regions.err, regions.active)
+            bad = bad & live[:, None]
+            # the finalised accumulators are equally load-bearing: once one
+            # goes non-finite (corrupted state — nothing healthy writes NaN
+            # there) the slot's global estimate can never recover, so flag
+            # the slot and zero the accumulator out of the reductions
+            bad_fin = live & ~(
+                jnp.isfinite(regions.fin_integral)
+                & jnp.isfinite(regions.fin_error)
+            )
+            nonfinite = jnp.any(bad, axis=1) | bad_fin
+            regions = dataclasses.replace(
+                regions,
+                est=jnp.where(bad, 0.0, regions.est),
+                err=jnp.where(bad, 0.0, regions.err),
+                active=regions.active & ~bad,
+                fin_integral=jnp.where(bad_fin, 0.0, regions.fin_integral),
+                fin_error=jnp.where(bad_fin, 0.0, regions.fin_error),
+            )
+
             if len(adv_ladder) > 1:
                 ixa = region_store.rung_index(adv_rungs, advance_target(widest, C))
                 integral, error, n_active, budget, advanced = jax.lax.switch(
@@ -482,7 +512,7 @@ class BatchEngine:
             # would eval the final advance's children one extra time and
             # break bit-parity with `integrate` on the max_iters path.
             capped = regions.it >= cfg.max_iters - 1
-            terminal = converged | (n_active == 0) | capped | evicted
+            terminal = converged | (n_active == 0) | capped | evicted | nonfinite
             done = state.done | (live & terminal)
             n_new_done = jnp.sum(done & ~state.done).astype(jnp.int32)
 
@@ -504,6 +534,7 @@ class BatchEngine:
                 "n_evals": regions.n_evals,
                 "overflowed": regions.overflowed,
                 "converged": converged,
+                "nonfinite": nonfinite,
                 "done": done,
                 "occupied": state.occupied,
                 "window": rungs[ix],
@@ -674,6 +705,7 @@ class BatchEngine:
                 "n_evals": z((B,), dtype),
                 "overflowed": z((B,), bool),
                 "converged": z((B,), bool),
+                "nonfinite": z((B,), bool),
                 "done": z((B,), bool),
                 "occupied": z((B,), bool),
                 "window": z((), jnp.int32),
@@ -718,13 +750,22 @@ class BatchEngine:
             out_specs=(P(AXIS), P(None, AXIS), P(), P(None, AXIS, None)),
         )
 
+    backend = "cubature"
+
     def status_of(
-        self, converged: bool, n_active: int, it: int, overflowed: bool
+        self,
+        converged: bool,
+        n_active: int,
+        it: int,
+        overflowed: bool,
+        nonfinite: bool = False,
     ) -> str:
         """Terminal taxonomy for collected slots (scheduler hook; the MC
         engine pool supplies its own — MC has no region store, so no
         capacity/no_active statuses)."""
-        return result_status(converged, n_active, it, self.cfg, overflowed)
+        return result_status(
+            converged, n_active, it, self.cfg, overflowed, nonfinite
+        )
 
     def run(self, state: BatchState, max_steps: int, tick: int):
         """Up to ``min(max_steps, cfg.sync_every)`` fused iterations.

@@ -1,0 +1,296 @@
+"""Self-contained graceful-degradation chaos self-test (subprocess-run).
+
+Must be launched as ``python -m repro.service.chaos_selftest [n_devices]`` —
+sets XLA_FLAGS before importing jax, then runs the batch quadrature service
+through every fault injector in :mod:`repro.service.faults` on meshes of
+1, 2, ..., n_devices virtual devices and asserts the graceful-degradation
+contract:
+
+- **survival**: the service completes every scenario (no hang, no unhandled
+  error), and every request yields exactly one final result;
+- **containment**: in a fleet with NaN-poisoned / corrupted slots, every
+  *healthy* request converges and its ``(integral, error, status,
+  iterations, n_evals)`` is bit-identical to the fault-free run — a faulty
+  slot is quarantined without perturbing anyone else's trajectory;
+- **re-routing**: quarantined/corrupted requests carry attempt provenance
+  (``attempts=2``, ``retried_from``, fallback ``backend``);
+- **resume parity**: after a mid-serve crash, ``resume=True`` replays to a
+  result set whose union with the pre-crash yields is exactly the fault-free
+  run's, bit-for-bit (duplicates from replayed post-snapshot work included);
+- **deadlines**: an expired SLO evicts with a best-effort partial result
+  instead of hanging the slot.
+
+Prints one JSON blob on the last line.
+"""
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+
+
+def _full(results):
+    """Full result tuples: scheduling included (cross-device-count parity)."""
+    return [
+        (
+            r.req_id,
+            float(r.integral).hex(),
+            float(r.error).hex(),
+            r.status,
+            r.iterations,
+            r.n_evals,
+            r.admitted_at,
+            r.finished_at,
+        )
+        for r in sorted(results, key=lambda r: r.req_id)
+    ]
+
+
+def _values(results):
+    """Value tuples: scheduling excluded.  A slot's numeric trajectory is a
+    pure function of (theta, tolerances, cfg) — independent of *when* it was
+    admitted and of every other slot — so these are the right unit for
+    comparing healthy requests between a faulty fleet (where extra/failed
+    requests shift admission order) and the fault-free fleet."""
+    return {
+        r.req_id: (
+            float(r.integral).hex(),
+            float(r.error).hex(),
+            r.status,
+            r.iterations,
+            r.n_evals,
+        )
+        for r in results
+    }
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import QuadratureConfig
+    from repro.core.integrands import get_param
+    from repro.service import BatchScheduler, QuadRequest
+    from repro.service.checkpoint import ServiceCheckpointer
+    from repro.service.faults import (
+        SimulatedCrash,
+        corrupt_slot_hook,
+        crash_at,
+        nan_family,
+        poison_theta,
+        storm_requests,
+    )
+    from repro.service.routing import GracefulScheduler
+
+    assert len(jax.devices()) == n_dev, jax.devices()
+    counts = [c for c in (1, 2, 4) if c <= n_dev]
+    family = get_param("genz_gaussian")
+    d = 2
+    cfg = QuadratureConfig(
+        d=d,
+        integrand="genz_gaussian",
+        rel_tol=1e-3,
+        capacity=1 << 10,
+        batch_slots=8,
+        max_iters=80,
+        sync_every=4,
+    )
+
+    def requests(n, seed=0, rel_tols=None):
+        rng = np.random.default_rng(seed)
+        return [
+            QuadRequest(
+                req_id=i,
+                theta=family.sample_theta(d, rng),
+                rel_tol=None if rel_tols is None else rel_tols[i],
+            )
+            for i in range(n)
+        ]
+
+    # req 0 runs at a tight tolerance so it is reliably still in flight when
+    # the corruption / deadline injectors fire mid-serve
+    rel_tols = [1e-6] + [1e-3] * 9
+    base_reqs = requests(10, rel_tols=rel_tols)
+    healthy_ids = {r.req_id for r in base_reqs}
+
+    out = {"n_devices": n_dev, "device_counts": counts, "scenarios": {}}
+    baseline_by_count = {}
+    for c in counts:
+        devices = jax.devices()[:c]
+        scen = {}
+
+        # --- fault-free reference -------------------------------------------
+        sched = BatchScheduler(cfg, family, devices=devices)
+        baseline = list(sched.serve(list(base_reqs)))
+        assert all(r.status == "converged" for r in baseline), _full(baseline)
+        baseline_by_count[c] = _full(baseline)
+        base_vals = _values(baseline)
+        scen["baseline"] = {"n_results": len(baseline)}
+
+        # --- NaN-poisoned integrands ----------------------------------------
+        # Three poisoned requests ride along with the ten healthy ones; the
+        # wrapped family NaNs for sentinel thetas only.  The cubature pass
+        # quarantines them, the graceful layer retries them on VEGAS (which
+        # also NaNs — the integrand really is broken), and the final results
+        # carry the full provenance.  Healthy requests must be untouched.
+        wrapped = nan_family(family)
+        poisoned = [
+            QuadRequest(req_id=100 + i, theta=poison_theta(base_reqs[0].theta))
+            for i in range(3)
+        ]
+        mixed = base_reqs[:5] + poisoned + base_reqs[5:]
+        graceful = GracefulScheduler(cfg, wrapped, devices=devices)
+        results = list(graceful.serve(list(mixed)))
+        assert len(results) == len(mixed), _full(results)
+        vals = _values(results)
+        for rid in healthy_ids:
+            assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+            assert vals[rid][2] == "converged", vals[rid]
+        for p in poisoned:
+            r = next(r for r in results if r.req_id == p.req_id)
+            assert r.status == "nonfinite", r
+            assert r.attempts == 2 and r.retried_from == "nonfinite", r
+            assert r.backend == "vegas", r
+        assert graceful.last_stats["quarantines"] >= 2 * len(poisoned), (
+            graceful.last_stats
+        )
+        assert graceful.last_stats["reroutes"] == len(poisoned), (
+            graceful.last_stats
+        )
+        scen["nan_injection"] = {
+            "quarantines": graceful.last_stats["quarantines"],
+            "reroutes": graceful.last_stats["reroutes"],
+            "healthy_parity": True,
+        }
+
+        # --- forced slot corruption -----------------------------------------
+        # Slot 0 (holding the tight-tolerance req 0) has its region estimates
+        # overwritten with NaN mid-serve.  The engine must quarantine it the
+        # next iteration, and the graceful layer re-routes the request to
+        # VEGAS — where, the integrand being perfectly healthy, it produces a
+        # real estimate again.
+        graceful = GracefulScheduler(
+            cfg,
+            family,
+            devices=devices,
+            on_tick=corrupt_slot_hook(0, 1, req_id=0),
+        )
+        results = list(graceful.serve(list(base_reqs)))
+        assert len(results) == len(base_reqs), _full(results)
+        vals = _values(results)
+        corrupted = next(r for r in results if r.req_id == 0)
+        assert corrupted.attempts == 2, corrupted
+        assert corrupted.retried_from == "nonfinite", corrupted
+        assert corrupted.backend == "vegas", corrupted
+        assert corrupted.status in ("converged", "max_iters"), corrupted
+        assert np.isfinite(corrupted.integral), corrupted
+        exact = family.exact(d, base_reqs[0].theta)
+        assert abs(corrupted.integral - exact) <= 1e-2 * abs(exact), (
+            corrupted.integral,
+            exact,
+        )
+        for rid in healthy_ids - {0}:
+            assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+        scen["slot_corruption"] = {
+            "rerouted_status": corrupted.status,
+            "healthy_parity": True,
+        }
+
+        # --- mid-serve crash + resume ---------------------------------------
+        with tempfile.TemporaryDirectory() as tmp:
+            ckpt = ServiceCheckpointer(tmp)
+            crashing = BatchScheduler(
+                cfg,
+                family,
+                devices=devices,
+                checkpointer=ckpt,
+                # snapshot every OTHER admission tick and crash off-cycle, so
+                # some results land between the last snapshot and the crash:
+                # the resumed run must re-serve them bit-identically
+                checkpoint_every=2,
+                on_tick=crash_at(3),
+            )
+            pre = []
+            try:
+                for r in crashing.serve(list(base_reqs)):
+                    pre.append(r)
+            except SimulatedCrash:
+                pass
+            else:
+                raise AssertionError("crash injector never fired")
+            assert ckpt.latest_step() is not None, os.listdir(tmp)
+            resumed = BatchScheduler(
+                cfg, family, devices=devices, checkpointer=ckpt
+            )
+            post = list(resumed.serve(list(base_reqs), resume=True))
+            by_id = {}
+            for r in pre + post:
+                t = _full([r])[0]
+                # post-snapshot work is replayed: duplicates must be
+                # bit-identical, not merely close
+                assert by_id.setdefault(r.req_id, t) == t, (by_id[r.req_id], t)
+            union = [by_id[k] for k in sorted(by_id)]
+            assert union == baseline_by_count[c], (union, baseline_by_count[c])
+            replayed = len(pre) + len(post) - len(by_id)
+            assert replayed > 0, (len(pre), len(post))
+            scen["crash_resume"] = {
+                "pre_crash": len(pre),
+                "post_resume": len(post),
+                "replayed": replayed,
+                "union_parity": True,
+            }
+
+        # --- queue storm ----------------------------------------------------
+        storm_n = 40
+        sched = BatchScheduler(cfg, family, devices=devices)
+        results = list(sched.serve(storm_requests(family, d, storm_n, seed=11)))
+        assert len(results) == storm_n, len(results)
+        assert all(r.status == "converged" for r in results), _full(results)[:3]
+        midflight = sum(1 for r in results if r.admitted_at > 0)
+        assert midflight > 0, _full(results)
+        scen["queue_storm"] = {
+            "n_results": len(results),
+            "midflight_admissions": midflight,
+        }
+
+        # --- deadline SLO ---------------------------------------------------
+        # Req 0 gets a hopeless tolerance and a small evaluation budget: it
+        # must be evicted with a finite best-effort partial, while everyone
+        # else's trajectory stays bit-identical to the fault-free run.
+        slo_reqs = [
+            dataclasses.replace(base_reqs[0], rel_tol=1e-12, max_evals=3e4)
+        ] + base_reqs[1:]
+        sched = BatchScheduler(cfg, family, devices=devices)
+        results = list(sched.serve(slo_reqs))
+        assert len(results) == len(slo_reqs), _full(results)
+        vals = _values(results)
+        dl = next(r for r in results if r.req_id == 0)
+        assert dl.status == "deadline", dl
+        assert dl.n_evals > 3e4, dl
+        assert np.isfinite(dl.integral) and np.isfinite(dl.error), dl
+        assert sched.last_stats["deadlines"] == 1, sched.last_stats
+        for rid in healthy_ids - {0}:
+            assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+        scen["deadline"] = {"partial_evals": dl.n_evals, "healthy_parity": True}
+
+        out["scenarios"][f"devices_{c}"] = scen
+
+    # the fault-free reference itself must hold the cross-device-count
+    # parity invariant (full tuples, scheduling included)
+    ref = baseline_by_count[counts[0]]
+    for c in counts[1:]:
+        assert baseline_by_count[c] == ref, (c, baseline_by_count[c][:2], ref[:2])
+
+    print("RESULT_JSON:" + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Service-level checkpoint/resume for the continuous-batching scheduler.
+
+A service snapshot is two artifacts, written in a strict order:
+
+1. the stacked engine state (a :class:`~repro.service.batch_engine.BatchState`
+   or :class:`~repro.mc.engine.VegasBatchState` pytree), saved atomically via
+   :class:`repro.checkpoint.manager.CheckpointManager` (tmp-dir + fsync'd
+   manifest + rename, CRC32 per leaf);
+2. a ``meta_XXXXXXXX.json`` sidecar holding everything the *host* loop needs
+   to replay: the slot -> request map (thetas round-trip bit-exactly through
+   JSON's float64 repr), per-slot admission iterations, the iteration/tick
+   counters, the host-loop stats, and the set of request ids already pulled
+   from the queue.
+
+The meta sidecar is written *after* the state and renamed into place
+atomically, so its presence commits the snapshot: restore picks the newest
+step for which both artifacts exist, and a crash between the two writes
+leaves a harmless orphaned state directory behind the previous complete
+snapshot.
+
+Resume parity: snapshots are taken at admission-tick boundaries, right after
+the tick's admissions.  From that point the scheduler's decisions are a pure
+function of (engine state, slot map, iteration counter, remaining queue) —
+all captured above — so a resumed run replays the original
+decision-for-decision and reproduces bit-identical results for every slot
+the crash did not touch.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+
+_META_RE = re.compile(r"^meta_(\d{8})\.json$")
+
+
+class ServiceCheckpointer:
+    """Snapshot/restore the full serving state of a :class:`BatchScheduler`.
+
+    ``save`` is synchronous on the state write (the engine donates its state
+    buffers into the next fused dispatch, so the snapshot must be on disk —
+    or at least copied to host, which ``CheckpointManager.save`` does before
+    returning — by the time the scheduler resumes the loop).
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.manager = CheckpointManager(os.path.join(directory, "state"), keep=keep)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, state, meta: dict) -> None:
+        """Write one snapshot: state first, then the committing meta sidecar."""
+        self.manager.save(step, state, blocking=True)
+        final = os.path.join(self.dir, f"meta_{step:08d}.json")
+        tmp = final + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, **meta}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        """Drop meta sidecars whose state the manager has already GC'd."""
+        keep = set(self.manager.all_steps())
+        for name in os.listdir(self.dir):
+            m = _META_RE.match(name)
+            if m and int(m.group(1)) not in keep:
+                os.unlink(os.path.join(self.dir, name))
+
+    # -- restore --------------------------------------------------------------
+
+    def complete_steps(self) -> list[int]:
+        """Steps with both artifacts on disk (the restorable snapshots)."""
+        metas = set()
+        for name in os.listdir(self.dir):
+            m = _META_RE.match(name)
+            if m:
+                metas.add(int(m.group(1)))
+        return sorted(metas & set(self.manager.all_steps()))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.complete_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, engine, step: Optional[int] = None):
+        """Rebuild ``(state, meta)`` for ``engine`` from the newest snapshot.
+
+        ``engine.init()`` supplies both the pytree structure and the current
+        placement: leaves are re-placed with the live state's shardings, so a
+        restore works across device counts (the manager loads full logical
+        arrays and re-shards).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete service snapshot in {self.dir}")
+        like = engine.init()
+        shardings = jax.tree.map(lambda x: x.sharding, like)
+        state, _ = self.manager.restore(like, step=step, shardings=shardings)
+        with open(os.path.join(self.dir, f"meta_{step:08d}.json")) as f:
+            meta = json.load(f)
+        return state, meta

@@ -1,0 +1,164 @@
+"""Deterministic fault injectors for the quadrature service.
+
+Chaos testing only earns its keep if a failure reproduces: every injector
+here is a pure function of its explicit inputs (a seed, a slot index, an
+iteration threshold) — no wall clock, no global state — so a chaos run that
+trips an assertion replays bit-for-bit.
+
+Injector families (used by :mod:`repro.service.chaos_selftest`):
+
+- **NaN integrands** — :func:`nan_family` wraps an integrand family so that
+  thetas carrying the :data:`NAN_SENTINEL` evaluate to NaN everywhere, and
+  :func:`poison_theta` plants the sentinel.  The wrapper stays traceable and
+  vmappable, and for unpoisoned thetas it computes ``where(False, nan, f)``
+  — a bitwise identity — so healthy requests are unaffected by the wrapping
+  itself.
+- **slot corruption** — :func:`corrupt_slot` overwrites one slot's on-device
+  state with non-finite values (simulating a soft memory error / bad
+  kernel), exercising the engines' quarantine paths.
+- **crash points** — :func:`crash_at` raises :class:`SimulatedCrash` from the
+  scheduler's ``on_tick`` hook at a chosen iteration, exercising
+  checkpoint/resume.
+- **queue storms** — :func:`storm_requests` builds a deterministic burst of
+  requests far exceeding the fleet's slot count, exercising admission
+  backpressure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.integrands import ParamIntegrand
+from repro.service.scheduler import QuadRequest
+
+#: Theta magnitude that triggers the NaN wrapper.  Large enough that no
+#: sampled problem instance ever reaches it, small enough to stay finite in
+#: float64 (so the *sentinel itself* never overflows before the check).
+NAN_SENTINEL = 1e300
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by fault hooks to kill the serve loop at a deterministic point."""
+
+
+def nan_family(family: ParamIntegrand) -> ParamIntegrand:
+    """Wrap ``family`` so sentinel-carrying thetas evaluate to NaN.
+
+    The poison travels *in the request's theta*, so one wrapped family serves
+    healthy and poisoned requests side by side in the same vmapped fleet —
+    exactly the scenario the quarantine must survive.
+    """
+    base = family.fn
+
+    def fn(x, theta):
+        poisoned = jnp.zeros((), bool)
+        for leaf in jax.tree_util.tree_leaves(theta):
+            poisoned = poisoned | jnp.any(jnp.asarray(leaf) >= NAN_SENTINEL)
+        return jnp.where(poisoned, jnp.nan, base(x, theta))
+
+    return dataclasses.replace(
+        family,
+        name=family.name + "+nanfault",
+        fn=fn,
+        description=f"{family.name} with sentinel-triggered NaN injection",
+    )
+
+
+def poison_theta(theta):
+    """Plant :data:`NAN_SENTINEL` in the first leaf of a theta pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(theta)
+    first = np.full_like(np.asarray(leaves[0], np.float64), NAN_SENTINEL)
+    return jax.tree_util.tree_unflatten(treedef, [first] + leaves[1:])
+
+
+def corrupt_slot(state, slot: int):
+    """Overwrite one slot's estimator state with NaN, preserving placement.
+
+    For the cubature :class:`~repro.service.batch_engine.BatchState` the
+    slot's *durable* state is poisoned — region centers (every active region
+    is re-split and re-evaluated each iteration, so transient per-region
+    estimates would simply be recomputed from clean geometry) and the
+    finalised-integral accumulator; for the MC
+    :class:`~repro.mc.engine.VegasBatchState` the slot's weighted-average
+    accumulators are.  The replacement arrays are re-placed with the
+    original leaves' shardings, so a corrupted fleet state stays valid input
+    for the next fused dispatch on any mesh.
+    """
+
+    def poison(leaf):
+        host = np.array(jax.device_get(leaf))
+        host[slot] = np.nan
+        return jax.device_put(host, leaf.sharding)
+
+    if hasattr(state, "regions"):  # cubature fleet
+        regions = dataclasses.replace(
+            state.regions,
+            centers=poison(state.regions.centers),
+            fin_integral=poison(state.regions.fin_integral),
+        )
+        return dataclasses.replace(state, regions=regions)
+    if hasattr(state, "mc"):  # vegas fleet
+        mc = dataclasses.replace(
+            state.mc,
+            sum_wi=poison(state.mc.sum_wi),
+            sum_wi2=poison(state.mc.sum_wi2),
+        )
+        return dataclasses.replace(state, mc=mc)
+    raise TypeError(f"unrecognised fleet state {type(state).__name__}")
+
+
+def corrupt_slot_hook(slot: int, at_iteration: int, req_id: Optional[int] = None):
+    """``on_tick`` hook: corrupt ``slot`` once, at the first tick >= threshold.
+
+    With ``req_id`` set, the hook holds fire until that request occupies the
+    slot — so the injection cannot land on whatever request was admitted
+    into the slot after the intended victim drained.
+    """
+    fired = {"done": False}
+
+    def hook(it, state, slot_req):
+        if fired["done"] or it < at_iteration:
+            return None
+        req = slot_req[slot]
+        if req is None or (req_id is not None and req.req_id != req_id):
+            return None
+        fired["done"] = True
+        return corrupt_slot(state, slot)
+
+    return hook
+
+
+def crash_at(at_iteration: int):
+    """``on_tick`` hook raising :class:`SimulatedCrash` at a fixed iteration."""
+
+    def hook(it, state, slot_req):
+        if it >= at_iteration:
+            raise SimulatedCrash(f"injected crash at iteration {it}")
+        return None
+
+    return hook
+
+
+def storm_requests(
+    family: ParamIntegrand,
+    d: int,
+    n: int,
+    seed: int = 0,
+    rel_tol: Optional[float] = None,
+    abs_tol: Optional[float] = None,
+    req_id_base: int = 0,
+) -> Iterator[QuadRequest]:
+    """A deterministic burst of ``n`` sampled problem instances."""
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        yield QuadRequest(
+            req_id=req_id_base + i,
+            theta=family.sample_theta(d, rng),
+            rel_tol=rel_tol,
+            abs_tol=abs_tol,
+        )

@@ -1,0 +1,184 @@
+"""Fallback re-routing: retry degraded requests on the backend that can serve them.
+
+The paper's robustness claim is about *finishing the job*: the adaptive
+solver keeps converging where a GPU-tailored baseline breaks down.  The
+service-level analogue is that a terminal-but-unconverged request should not
+simply be reported as a failure when another engine pool can still produce a
+converged estimate:
+
+- a cubature slot evicted as ``capacity`` hit region-store saturation — the
+  signature of a high-dimensional / low-regularity problem that importance-
+  sampling MC handles without a region store (cuVegas regime), so it is
+  re-admitted once to the VEGAS pool;
+- a ``nonfinite`` quarantine may be caused by cubature's deterministic node
+  placement hitting a pole; the VEGAS pool samples different points and may
+  miss it (and if the integrand is NaN everywhere, the retry quarantines
+  again and the request is reported ``nonfinite`` with its provenance);
+- a VEGAS request that exhausts ``max_iters`` without meeting its tolerance
+  is retried once at a relaxed tolerance, trading accuracy for an answer.
+
+Every retry consumes the request's attempt budget; the final
+:class:`~repro.service.scheduler.QuadResult` carries the provenance
+(``backend``, ``attempts``, ``retried_from``) so callers can tell a
+first-try estimate from a degraded one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Optional, Union
+
+from repro.core.config import QuadratureConfig
+from repro.core.integrands import ParamIntegrand
+from repro.service.scheduler import (
+    _ZERO_STATS,
+    BatchScheduler,
+    QuadRequest,
+    QuadResult,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReroutePolicy:
+    """When and how a terminal-but-degraded request earns another attempt.
+
+    ``max_attempts`` bounds total admissions per request (1 = never retry).
+    ``reroute_statuses`` re-admit a cubature request to the VEGAS pool;
+    ``relax_statuses`` re-admit to the *same* backend with tolerances
+    loosened by ``tol_relax``.
+    """
+
+    max_attempts: int = 2
+    reroute_statuses: tuple = ("capacity", "nonfinite")
+    relax_statuses: tuple = ("max_iters",)
+    tol_relax: float = 10.0
+
+    def validate(self) -> "ReroutePolicy":
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.tol_relax < 1.0:
+            raise ValueError(f"tol_relax must be >= 1, got {self.tol_relax}")
+        return self
+
+
+class GracefulScheduler:
+    """A :class:`BatchScheduler` with fallback re-routing.
+
+    Serves the request stream through the primary pool, then re-admits
+    degraded requests (per :class:`ReroutePolicy`) to fallback pools:
+    cubature ``capacity``/``nonfinite`` evictions to a single-device VEGAS
+    pool, tolerance-starved requests to a relaxed-tolerance pass on their own
+    backend.  Results that need no retry are yielded as soon as the primary
+    pool collects them; retried requests are yielded after their final
+    attempt, with provenance filled in.
+
+    ``last_stats`` aggregates the host-loop counters of every pool plus
+    ``reroutes`` (fallback re-admissions, both kinds).
+    """
+
+    def __init__(
+        self,
+        cfg: QuadratureConfig,
+        family: Union[ParamIntegrand, str, None] = None,
+        mesh=None,
+        devices=None,
+        policy: Optional[ReroutePolicy] = None,
+        **scheduler_kwargs,
+    ):
+        self.policy = (policy or ReroutePolicy()).validate()
+        self.primary = BatchScheduler(
+            cfg, family, mesh=mesh, devices=devices, **scheduler_kwargs
+        )
+        self.cfg = self.primary.cfg
+        self.family = self.primary.engine.family
+        self._vegas_pool: Optional[BatchScheduler] = None
+        self.last_stats: dict = dict(_ZERO_STATS, reroutes=0)
+
+    def _vegas(self) -> BatchScheduler:
+        """The fallback MC pool, built lazily (it compiles its own fleet)."""
+        if self._vegas_pool is None:
+            cfg = dataclasses.replace(
+                self.cfg, backend="vegas", service_devices=1
+            )
+            self._vegas_pool = BatchScheduler(cfg, self.family)
+        return self._vegas_pool
+
+    def serve(
+        self, requests: Iterable[QuadRequest], resume: bool = False
+    ) -> Iterator[QuadResult]:
+        policy = self.policy
+        stats = dict(_ZERO_STATS, reroutes=0)
+        self.last_stats = stats
+
+        def merge(pool_stats: dict) -> None:
+            for key, val in pool_stats.items():
+                stats[key] = stats.get(key, 0) + val
+
+        by_id: dict[int, QuadRequest] = {}
+
+        def recording(stream):
+            for req in stream:
+                by_id[req.req_id] = req
+                yield req
+
+        primary_backend = self.primary.engine.backend
+        reroute: list[QuadResult] = []  # cubature -> vegas pool
+        relax: list[QuadResult] = []  # same backend, loosened tolerances
+        for res in self.primary.serve(recording(requests), resume=resume):
+            if policy.max_attempts > 1 and res.status in policy.relax_statuses:
+                relax.append(res)
+            elif (
+                policy.max_attempts > 1
+                and primary_backend == "cubature"
+                and res.status in policy.reroute_statuses
+            ):
+                reroute.append(res)
+            else:
+                yield res
+        merge(self.primary.last_stats)
+
+        # Fallback passes run after the primary fleet drains: the retry
+        # population is tiny by construction (degraded requests only), so a
+        # dedicated small pass beats holding primary slots hostage.  Each
+        # pool's serve() builds fresh state, so reusing a scheduler is free.
+        if reroute:
+            stats["reroutes"] += len(reroute)
+            prior = {r.req_id: r for r in reroute}
+            pool = self._vegas()
+            for res in pool.serve([by_id[r.req_id] for r in reroute]):
+                yield dataclasses.replace(
+                    res,
+                    attempts=prior[res.req_id].attempts + 1,
+                    retried_from=prior[res.req_id].status,
+                )
+            merge(pool.last_stats)
+
+        if relax:
+            stats["reroutes"] += len(relax)
+            prior = {r.req_id: r for r in relax}
+            cfg = self.cfg
+            retries = [
+                dataclasses.replace(
+                    by_id[r.req_id],
+                    rel_tol=(
+                        cfg.rel_tol
+                        if by_id[r.req_id].rel_tol is None
+                        else by_id[r.req_id].rel_tol
+                    )
+                    * policy.tol_relax,
+                    abs_tol=(
+                        cfg.abs_tol
+                        if by_id[r.req_id].abs_tol is None
+                        else by_id[r.req_id].abs_tol
+                    )
+                    * policy.tol_relax,
+                )
+                for r in relax
+            ]
+            for res in self.primary.serve(retries):
+                yield dataclasses.replace(
+                    res,
+                    attempts=prior[res.req_id].attempts + 1,
+                    retried_from=prior[res.req_id].status,
+                )
+            merge(self.primary.last_stats)

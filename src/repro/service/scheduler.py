@@ -33,13 +33,27 @@ Termination taxonomy per request (mirrors ``AdaptiveResult.status``):
   estimate so the slot can serve the rest of the queue instead of grinding
   a hopeless problem (transient saturation that converges within the grace
   period keeps exact parity with the serial driver);
-- ``no_active`` / ``max_iters`` — degenerate population / iteration cap.
+- ``no_active`` / ``max_iters`` — degenerate population / iteration cap;
+- ``nonfinite`` — the slot produced NaN/Inf estimates; the engine quarantined
+  the offending regions (zeroed their contributions, deactivated them) the
+  same iteration, so the rest of the fleet's psum'd reductions never see the
+  poison, and the scheduler collects the slot with its best-effort estimate;
+- ``deadline`` — the request's SLO (``deadline_s`` wall clock and/or
+  ``max_evals`` evaluation budget) expired at a dispatch boundary: the
+  scheduler evicts the slot with its best-effort partial estimate instead of
+  letting one slow problem hold a slot indefinitely.
+
+Graceful degradation on top of this taxonomy (fallback re-routing of
+``capacity``/``nonfinite`` evictions to the VEGAS pool, looser-tolerance
+retries) lives in :mod:`repro.service.routing`; service-level
+checkpoint/resume in :mod:`repro.service.checkpoint`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable, Iterator, Optional, Union
+import time
+from typing import Any, Callable, Iterable, Iterator, Optional, Union
 
 import jax
 import numpy as np
@@ -73,32 +87,104 @@ def make_engine(
 
 @dataclasses.dataclass(frozen=True)
 class QuadRequest:
-    """One integration problem: a theta of the engine's family + tolerances."""
+    """One integration problem: a theta of the engine's family + tolerances.
+
+    ``deadline_s`` / ``max_evals`` are best-effort SLOs, checked at dispatch
+    boundaries (the host only observes slot metrics between fused launches):
+    once either budget is exhausted the slot is evicted with its current
+    partial estimate and status ``deadline`` instead of holding the slot.
+    ``max_evals`` is deterministic (counted in integrand evaluations);
+    ``deadline_s`` is wall clock measured from admission.
+    """
 
     req_id: int
     theta: Any  # pytree matching the family's theta_fields, leaves (d,)
     rel_tol: Optional[float] = None  # None -> cfg default
     abs_tol: Optional[float] = None
+    deadline_s: Optional[float] = None  # wall-clock budget from admission
+    max_evals: Optional[float] = None  # integrand-evaluation budget
 
 
 @dataclasses.dataclass(frozen=True)
 class QuadResult:
-    """Terminal state of one request (statuses as in AdaptiveResult)."""
+    """Terminal state of one request (statuses as in AdaptiveResult).
+
+    ``backend``/``attempts``/``retried_from`` record attempt provenance:
+    which engine pool produced this estimate, how many admissions the
+    request consumed in total, and — for re-routed/retried requests — the
+    terminal status of the attempt that triggered the re-route (see
+    :class:`repro.service.routing.GracefulScheduler`).
+    """
 
     req_id: int
     integral: float
     error: float
-    status: str  # converged | capacity | no_active | max_iters
+    status: str  # converged | capacity | no_active | max_iters | nonfinite | deadline
     iterations: int  # per-slot adaptive iterations spent on this problem
     n_evals: float  # integrand evaluations spent on this problem
     admitted_at: int  # scheduler iteration at which the slot was filled
     finished_at: int  # scheduler iteration at which done flipped on
+    backend: str = "cubature"  # engine pool that produced this estimate
+    attempts: int = 1  # admissions consumed (1 = first attempt)
+    retried_from: Optional[str] = None  # prior attempt's terminal status
 
     def summary(self) -> str:
+        via = f" via={self.backend}" if self.attempts > 1 else ""
         return (
             f"req={self.req_id} I={self.integral:.15e} eps={self.error:.3e} "
             f"[{self.status}] iters={self.iterations} evals={self.n_evals:.3g}"
+            f"{via}"
         )
+
+
+_ZERO_STATS = {
+    "iterations": 0,
+    "dispatches": 0,
+    "migrations": 0,
+    "quarantines": 0,
+    "deadlines": 0,
+}
+
+
+def encode_request(req: QuadRequest) -> dict:
+    """JSON-able form of a request (theta leaves as float64 lists).
+
+    ``json`` serialises float64 via ``repr``, which round-trips bit-exactly,
+    so a decode of an encode reconstructs the identical problem — the
+    service checkpoint's resume-parity argument rests on this.
+    """
+    return {
+        "req_id": int(req.req_id),
+        "theta": jax.tree.map(
+            lambda x: np.asarray(x, np.float64).tolist(), req.theta
+        ),
+        "rel_tol": None if req.rel_tol is None else float(req.rel_tol),
+        "abs_tol": None if req.abs_tol is None else float(req.abs_tol),
+        "deadline_s": None if req.deadline_s is None else float(req.deadline_s),
+        "max_evals": None if req.max_evals is None else float(req.max_evals),
+    }
+
+
+def decode_request(obj: dict, theta_template) -> QuadRequest:
+    """Inverse of :func:`encode_request`.
+
+    ``theta_template`` (the engine's) supplies the pytree structure so the
+    stored nested lists land as leaves of the right shape rather than being
+    re-flattened as pytrees themselves.
+    """
+    theta = jax.tree.map(
+        lambda t, v: np.asarray(v, np.float64).reshape(np.shape(t)),
+        theta_template,
+        obj["theta"],
+    )
+    return QuadRequest(
+        req_id=int(obj["req_id"]),
+        theta=theta,
+        rel_tol=obj.get("rel_tol"),
+        abs_tol=obj.get("abs_tol"),
+        deadline_s=obj.get("deadline_s"),
+        max_evals=obj.get("max_evals"),
+    )
 
 
 class BatchScheduler:
@@ -106,8 +192,18 @@ class BatchScheduler:
 
     After :meth:`serve` completes, :attr:`last_stats` holds host-loop
     counters for the run: ``iterations`` (fleet iterations), ``dispatches``
-    (fused engine launches) and ``migrations`` (problems moved between
-    devices by the cyclic rebalancer).
+    (fused engine launches), ``migrations`` (problems moved between devices
+    by the cyclic rebalancer), ``quarantines`` (slots collected with a
+    ``nonfinite`` status) and ``deadlines`` (slots evicted on an expired
+    SLO).
+
+    ``checkpointer`` (a :class:`repro.service.checkpoint.ServiceCheckpointer`)
+    snapshots the stacked engine state + the slot -> request map every
+    ``checkpoint_every`` admission ticks; ``serve(resume=True)`` restores the
+    latest snapshot and replays from it — bit-identically for slots the
+    crash did not touch.  ``on_tick(it, state, slot_req)`` is a host hook
+    called at every dispatch boundary (fault injection, external monitoring);
+    it may return a replacement state pytree or ``None``.
     """
 
     def __init__(
@@ -117,6 +213,9 @@ class BatchScheduler:
         engine: Optional[BatchEngine] = None,
         mesh=None,
         devices=None,
+        checkpointer=None,
+        checkpoint_every: int = 0,
+        on_tick: Optional[Callable] = None,
     ):
         if engine is not None:
             if mesh is not None or devices is not None:
@@ -130,14 +229,30 @@ class BatchScheduler:
         else:
             self.engine = make_engine(cfg, family, mesh=mesh, devices=devices)
         self.cfg = self.engine.cfg
-        self.last_stats: dict = {"iterations": 0, "dispatches": 0, "migrations": 0}
+        if checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every must be >= 0, got {checkpoint_every}")
+        if checkpoint_every and checkpointer is None:
+            raise ValueError("checkpoint_every > 0 requires a checkpointer")
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self.on_tick = on_tick
+        self.last_stats: dict = dict(_ZERO_STATS)
 
-    def serve(self, requests: Iterable[QuadRequest]) -> Iterator[QuadResult]:
+    def serve(
+        self, requests: Iterable[QuadRequest], resume: bool = False
+    ) -> Iterator[QuadResult]:
         """Run the fleet to completion, yielding results as slots converge.
 
         ``requests`` may be any iterable (including a generator — it is only
         pulled from when a slot is free, so an unbounded stream backpressures
         naturally).  Every request yields exactly one result.
+
+        With ``resume=True`` the latest service checkpoint is restored first:
+        in-flight slots resume mid-refinement, requests the crashed run had
+        already pulled are skipped from ``requests`` (the caller re-supplies
+        the same stream), and requests that finished *after* the restored
+        snapshot are served again — deterministically, so the duplicates are
+        bit-identical to the results the crashed run already yielded.
         """
         engine = self.engine
         cfg = self.cfg
@@ -147,23 +262,48 @@ class BatchScheduler:
         exhausted = False  # the iterator signalled StopIteration
         slot_req: list[Optional[QuadRequest]] = [None] * B
         slot_admitted = np.zeros(B, np.int64)
-        stats = {"iterations": 0, "dispatches": 0, "migrations": 0}
+        slot_wall = [0.0] * B  # admission wall clock, for deadline_s
+        pulled_ids: set[int] = set()
+        skip_ids: set[int] = set()
+        stats = dict(_ZERO_STATS)
         self.last_stats = stats
         state = engine.init()
         it = 0
+        ticks = 0  # admission passes completed (checkpoint cadence unit)
+
+        if resume:
+            if self.checkpointer is None:
+                raise ValueError("resume=True requires a checkpointer")
+            state, meta = self.checkpointer.restore(engine)
+            it = int(meta["it"])
+            ticks = int(meta["ticks"])
+            stats.update(meta["stats"])
+            pulled_ids = set(meta["pulled_ids"])
+            skip_ids = set(pulled_ids)
+            for entry in meta["slots"]:
+                slot = int(entry["slot"])
+                slot_req[slot] = decode_request(entry["req"], engine.theta_template)
+                slot_admitted[slot] = int(entry["admitted_at"])
+                slot_wall[slot] = time.monotonic()  # wall deadlines restart
 
         def pull() -> Optional[QuadRequest]:
             # Requests are pulled ONLY here, from admission passes — never
             # speculatively — so a generator that derives its next request
             # from results yielded so far sees exactly the per-iteration
             # loop's pull points, and an unbounded stream backpressures on
-            # slot availability.
+            # slot availability.  On resume, requests the crashed run had
+            # already pulled are skipped so the replayed stream lines up
+            # with the restored slot map.
             nonlocal exhausted
             if exhausted:
                 return None
             req = next(pending, None)
+            while req is not None and req.req_id in skip_ids:
+                req = next(pending, None)
             if req is None:
                 exhausted = True
+            else:
+                pulled_ids.add(req.req_id)
             return req
 
         def admission_order() -> list[int]:
@@ -199,6 +339,40 @@ class BatchScheduler:
                 )
                 slot_req[slot] = req
                 slot_admitted[slot] = it
+                slot_wall[slot] = time.monotonic()
+            return state
+
+        def admission_tick(state: BatchState) -> BatchState:
+            """One admission pass + the checkpoint cadence hanging off it.
+
+            The snapshot is taken *after* the admissions so a resumed run
+            continues from a tick boundary: the next host decision after
+            restore is the next dispatch, exactly as in the original run.
+            """
+            nonlocal ticks
+            state = admit_free_slots(state)
+            ticks += 1
+            if (
+                self.checkpointer is not None
+                and self.checkpoint_every > 0
+                and ticks % self.checkpoint_every == 0
+            ):
+                meta = {
+                    "it": it,
+                    "ticks": ticks,
+                    "stats": stats,
+                    "pulled_ids": sorted(pulled_ids),
+                    "slots": [
+                        {
+                            "slot": s,
+                            "req": encode_request(slot_req[s]),
+                            "admitted_at": int(slot_admitted[s]),
+                        }
+                        for s in range(B)
+                        if slot_req[s] is not None
+                    ],
+                }
+                self.checkpointer.save(it, state, meta)
             return state
 
         def apply_moves(rows: np.ndarray) -> None:
@@ -211,14 +385,19 @@ class BatchScheduler:
                 return
             snapshot_req = list(slot_req)
             snapshot_adm = slot_admitted.copy()
+            snapshot_wall = list(slot_wall)
             for src, dst in valid:
                 assert snapshot_req[src] is not None, (src, dst)
                 slot_req[dst] = snapshot_req[src]
                 slot_admitted[dst] = snapshot_adm[src]
+                slot_wall[dst] = snapshot_wall[src]
                 slot_req[src] = None
             stats["migrations"] += len(valid)
 
-        state = admit_free_slots(state)
+        if not resume:
+            # on resume the snapshot was taken at a tick boundary, right
+            # after its admissions: the next host decision is the dispatch
+            state = admission_tick(state)
         while any(r is not None for r in slot_req):
             # A dispatch may not run past the next admit tick while an
             # admission may be pending (free slot + a queue not yet known to
@@ -250,20 +429,25 @@ class BatchScheduler:
             # req_id order: deterministic across device counts (collection
             # within one iteration has no inherent slot order anyway)
             for req_id, slot in sorted(finished):
+                status = engine.status_of(
+                    bool(ms["converged"][k - 1][slot]),
+                    int(ms["n_active"][k - 1][slot]),
+                    int(ms["it"][k - 1][slot]),
+                    bool(ms["overflowed"][k - 1][slot]),
+                    bool(ms["nonfinite"][k - 1][slot]),
+                )
+                if status == "nonfinite":
+                    stats["quarantines"] += 1
                 yield QuadResult(
                     req_id=req_id,
                     integral=float(ms["integral"][k - 1][slot]),
                     error=float(ms["error"][k - 1][slot]),
-                    status=engine.status_of(
-                        bool(ms["converged"][k - 1][slot]),
-                        int(ms["n_active"][k - 1][slot]),
-                        int(ms["it"][k - 1][slot]),
-                        bool(ms["overflowed"][k - 1][slot]),
-                    ),
+                    status=status,
                     iterations=int(ms["it"][k - 1][slot]),
                     n_evals=float(ms["n_evals"][k - 1][slot]),
                     admitted_at=int(slot_admitted[slot]),
                     finished_at=it,
+                    backend=engine.backend,
                 )
             # migrations of the final executed iteration happened *after* its
             # metrics snapshot (and done slots never migrate), so the map
@@ -272,12 +456,50 @@ class BatchScheduler:
             for _, slot in finished:
                 state = engine.release(state, slot)
                 slot_req[slot] = None
+            # Deadline sweep: SLOs are enforced here, at the dispatch
+            # boundary (the host cannot observe a slot mid-dispatch).  The
+            # evicted slot's row-(k-1) metrics are its best-effort partial
+            # estimate; releasing it only clears this slot's masks, so the
+            # other slots' trajectories are untouched bit-for-bit.
+            now = time.monotonic()
+            for slot in range(B):
+                req = slot_req[slot]
+                if req is None or (req.deadline_s is None and req.max_evals is None):
+                    continue
+                over_wall = (
+                    req.deadline_s is not None
+                    and now - slot_wall[slot] > req.deadline_s
+                )
+                over_evals = (
+                    req.max_evals is not None
+                    and float(ms["n_evals"][k - 1][slot]) > req.max_evals
+                )
+                if not (over_wall or over_evals):
+                    continue
+                stats["deadlines"] += 1
+                yield QuadResult(
+                    req_id=req.req_id,
+                    integral=float(ms["integral"][k - 1][slot]),
+                    error=float(ms["error"][k - 1][slot]),
+                    status="deadline",
+                    iterations=int(ms["it"][k - 1][slot]),
+                    n_evals=float(ms["n_evals"][k - 1][slot]),
+                    admitted_at=int(slot_admitted[slot]),
+                    finished_at=it,
+                    backend=engine.backend,
+                )
+                state = engine.release(state, slot)
+                slot_req[slot] = None
             # Admit on the configured cadence — but never let the fleet go
             # idle with work still queued: if every slot just drained we
             # admit immediately rather than spinning (or exiting) until the
             # next admit tick.
             if it % cfg.admit_every == 0 or all(r is None for r in slot_req):
-                state = admit_free_slots(state)
+                state = admission_tick(state)
+            if self.on_tick is not None:
+                replacement = self.on_tick(it, state, list(slot_req))
+                if replacement is not None:
+                    state = replacement
         # drain: nothing in flight, so nothing may remain unadmitted
         leftover = pull()
         if leftover is not None:  # pragma: no cover - invariant guard

@@ -292,3 +292,58 @@ def test_auto_backend_routes_service_by_dimension():
     )
     assert isinstance(lo, BatchEngine) and not isinstance(lo, VegasBatchEngine)
     assert isinstance(hi, VegasBatchEngine)
+
+
+# --- chi^2/dof guard boundaries -----------------------------------------------
+
+
+def test_chi2_single_accumulated_iteration_boundary():
+    """mc_max_iters = mc_warmup + 1: exactly one post-warmup iteration.
+
+    With n_acc=1 there is no dof for the consistency check, so the guard
+    must (a) not divide by zero, (b) report chi2/dof = 0 and the raw
+    (uninflated) sigma, and (c) refuse to converge no matter how loose the
+    tolerance — a lucky single iteration has no error bar behind it."""
+    cfg = QuadratureConfig(
+        d=3,
+        integrand="genz_gaussian",
+        rel_tol=1e30,  # absurdly loose: only MIN_ACCUMULATED can block
+        backend="vegas",
+        mc_samples=2048,
+        mc_warmup=2,
+        mc_max_iters=3,
+    )
+    res = integrate_vegas(cfg, integrand=lambda x: jnp.prod(x, axis=0))
+    assert res.status == "max_iters"
+    assert res.iterations == 3
+    assert res.chi2_dof == 0.0
+    assert np.isfinite(res.error) and res.error > 0.0
+    exact = 0.5**3
+    assert abs(res.integral - exact) < 5 * res.error
+
+
+def test_chi2_inflation_on_discontinuous_integrand():
+    """Iteration estimates of a discontinuous integrand scatter more than
+    their per-iteration sigmas admit: chi^2/dof must exceed 1 and the
+    reported error must carry the sqrt(chi^2/dof) inflation."""
+    cfg = QuadratureConfig(
+        d=2,
+        integrand="genz_gaussian",
+        rel_tol=1e-4,
+        backend="vegas",
+        mc_samples=512,
+        mc_warmup=2,
+        mc_max_iters=40,
+    )
+    exact = 0.25  # corner-indicator volume
+    res = integrate_vegas(
+        cfg, integrand=lambda x: jnp.where(jnp.all(x < 0.5, axis=0), 1.0, 0.0)
+    )
+    assert res.chi2_dof > 1.0
+    # error = sigma * sqrt(chi2/dof): backing the inflation out must SHRINK
+    # the bar, i.e. the inflation really is applied
+    raw_sigma = res.error / np.sqrt(res.chi2_dof)
+    assert raw_sigma < res.error
+    assert np.isfinite(res.integral)
+    # the estimate itself stays sane (inflation flags the bar, not the value)
+    assert abs(res.integral - exact) < 0.02
