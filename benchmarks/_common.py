@@ -28,10 +28,62 @@ def run_worker(spec: dict, timeout: int = 3600) -> list[dict]:
     return json.loads(line[-1][len("RESULT_JSON:") :])
 
 
-def save_results(name: str, records) -> str:
+#: wall-clock date stamped into result files — set once by the runner
+#: (``benchmarks/run.py``) so every module saved in one sweep carries the
+#: same timestamp; stays None for ad-hoc single-module runs
+RUN_DATE: str | None = None
+
+
+def _git_sha() -> str | None:
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True,
+            text=True,
+            cwd=_REPO,
+            timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if proc.returncode != 0:
+        return None
+    return proc.stdout.strip() or None
+
+
+def collect_meta(date: str | None = None) -> dict:
+    """Provenance header for a results file: who/what/where produced it."""
+    meta = {
+        "date": RUN_DATE if date is None else date,
+        "git_sha": _git_sha(),
+        "jax_version": None,
+        "platform": None,
+        "device_kind": None,
+        "device_count": None,
+    }
+    try:
+        import jax
+
+        devices = jax.devices()
+        meta["jax_version"] = jax.__version__
+        meta["platform"] = devices[0].platform
+        meta["device_kind"] = devices[0].device_kind
+        meta["device_count"] = len(devices)
+    except Exception:  # noqa: BLE001 — provenance must never fail a run
+        pass
+    return meta
+
+
+def save_results(name: str, records, meta: dict | None = None) -> str:
+    """Write ``{"meta": ..., "records": ...}`` to results/benchmarks/NAME.json.
+
+    The meta header makes every perf number attributable: jax version,
+    device kind/count, git SHA, and the sweep date the runner passed in.
+    Extra ``meta`` keys from the caller override the collected defaults.
+    """
     out_dir = os.path.join(_REPO, "results", "benchmarks")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"{name}.json")
+    payload = {"meta": {**collect_meta(), **(meta or {})}, "records": records}
     with open(path, "w") as f:
-        json.dump(records, f, indent=1)
+        json.dump(payload, f, indent=1)
     return path

@@ -1,6 +1,12 @@
 """Fig. 4b analogue: per-iteration work imbalance (idle-time proxy) with the
 redistribution policy ON vs OFF, by device count.  idle ~ 1 - mean/max of
-per-device work per iteration."""
+per-device work per iteration.
+
+The ``mean_imbalance`` reported here is ``DistributedResult.mean_imbalance()``
+— the same ``1 - mean/max`` statistic ``repro.telemetry.loadview`` derives
+from a live run's recorded events (``mean_work_imbalance_from_events``), so
+offline-benchmark and live-telemetry numbers are directly comparable
+(equality on the same run is asserted in ``tests/test_telemetry.py``)."""
 
 from benchmarks._common import run_worker, save_results
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+from datetime import datetime
 
 
 def main() -> None:
@@ -17,6 +18,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated module names")
     args = ap.parse_args()
+
+    # the runner owns the sweep timestamp: every module saved below carries
+    # the same date in its results-file meta header
+    from benchmarks import _common
+
+    _common.RUN_DATE = datetime.now().astimezone().isoformat(timespec="seconds")
 
     from benchmarks import (
         batch_throughput,

@@ -36,6 +36,7 @@ from repro.core.integrands import get as get_integrand
 from repro.core.region_store import RegionState
 from repro.core.rules import make_rule
 from repro.core.split import classify_split_compact
+from repro.telemetry import NULL
 
 
 @dataclasses.dataclass
@@ -330,8 +331,15 @@ def integrate(
     cfg: QuadratureConfig,
     integrand: Optional[Callable] = None,
     callback: Optional[Callable[[int, float, float, int], None]] = None,
+    recorder=NULL,
 ) -> AdaptiveResult:
-    """Host-driven adaptive integration (one scalar sync per iteration)."""
+    """Host-driven adaptive integration (one scalar sync per iteration).
+
+    ``recorder`` (a :class:`repro.telemetry.Recorder`) gets per-iteration
+    ``core.eval``/``core.advance`` spans and a ``core.iter`` instant with
+    the synced estimates — all recorded host-side between dispatches, so
+    telemetry cannot change the refinement trajectory.
+    """
     cfg, lo, hi, total_volume, rule, state = _setup(cfg, integrand)
 
     donate = donate_argnums()
@@ -393,8 +401,19 @@ def integrate(
     integral = error = 0.0
     n_active = n_next = cfg.resolved_n_init()
     for _ in range(cfg.max_iters):
-        state = eval_step_for(n_next)(state)
-        integral, error, n_active = (float(x) for x in metrics_for(n_next)(state))
+        with recorder.span("core.eval", window=int(n_next)):
+            state = eval_step_for(n_next)(state)
+            integral, error, n_active = (
+                float(x) for x in metrics_for(n_next)(state)
+            )
+        if recorder.enabled:
+            recorder.event(
+                "core.iter",
+                it=int(state.it),
+                integral=integral,
+                error=error,
+                n_active=int(n_active),
+            )
         if callback is not None:
             callback(int(state.it), integral, error, int(n_active))
         if not (np.isfinite(integral) and np.isfinite(error)):
@@ -411,8 +430,9 @@ def integrate(
             break
         if n_active == 0:
             break
-        state, n_dev = advance_for(int(n_active))(state)
-        n_next = int(n_dev)
+        with recorder.span("core.advance", n_active=int(n_active)):
+            state, n_dev = advance_for(int(n_active))(state)
+            n_next = int(n_dev)
 
     return AdaptiveResult(
         integral=integral,
@@ -433,9 +453,14 @@ def integrate(
 
 
 def integrate_device(
-    cfg: QuadratureConfig, integrand: Optional[Callable] = None
+    cfg: QuadratureConfig, integrand: Optional[Callable] = None, recorder=NULL
 ) -> AdaptiveResult:
-    """Fully device-resident driver: lax.while_loop, zero host syncs."""
+    """Fully device-resident driver: lax.while_loop, zero host syncs.
+
+    The host cannot observe per-iteration state here, so telemetry is one
+    ``core.device_loop`` span around the whole resident loop — by design
+    (DESIGN.md §8: nothing is ever recorded inside traced code).
+    """
     cfg, lo, hi, total_volume, rule, state = _setup(cfg, integrand)
     eval_step = make_switched_eval_step(cfg, rule)
     advance = make_switched_advance_step(cfg, total_volume, hi - lo)
@@ -454,9 +479,10 @@ def integrate_device(
         # Only refine when not converged (cond re-checks next trip).
         return jax.lax.cond(done, lambda s: s, advance, state)
 
-    final = jax.lax.while_loop(cond, body, state)
-    integral, error = (float(x) for x in final.global_estimates())
-    n_active = int(final.n_active())
+    with recorder.span("core.device_loop", max_iters=cfg.max_iters):
+        final = jax.lax.while_loop(cond, body, state)
+        integral, error = (float(x) for x in final.global_estimates())
+        n_active = int(final.n_active())
     # the device-resident loop has no recovery path (NaN fails the on-device
     # convergence check until another bound fires); report honestly
     nonfinite = not (np.isfinite(integral) and np.isfinite(error))

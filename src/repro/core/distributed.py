@@ -305,8 +305,16 @@ def integrate_distributed(
     integrand: Optional[Callable] = None,
     mesh: Optional[Mesh] = None,
     devices=None,
+    recorder=None,
 ) -> DistributedResult:
-    """Host-driven multi-device integration over all available devices."""
+    """Host-driven multi-device integration over all available devices.
+
+    ``recorder`` (a :class:`repro.telemetry.Recorder`) gets a
+    ``dist.dispatch`` span per fused launch and, per executed iteration, a
+    ``dist.work_imb`` gauge (the paper's Fig. 4b idle-time proxy, the same
+    value appended to ``history``) plus a ``dist.iter`` instant — recorded
+    from the read-back metrics only, after the dispatch returns.
+    """
     cfg = cfg.validate()
     if mesh is None:
         devices = devices if devices is not None else jax.devices()
@@ -337,28 +345,44 @@ def integrate_distributed(
         donate_argnums=donate_argnums(mesh.devices.flat[0].platform),
     )
 
+    from repro.telemetry import NULL
+
+    recorder = NULL if recorder is None else recorder
     history = []
     converged = False
     integral = error = 0.0
     n_active = 0
     it = 0
     while it < cfg.max_iters:
-        state, ms, executed = step(state)
-        executed = np.asarray(executed)
-        ms = jax.device_get(ms)
+        with recorder.span("dist.dispatch", it=it) as sp:
+            state, ms, executed = step(state)
+            executed = np.asarray(executed)
+            ms = jax.device_get(ms)
+            sp["executed"] = int(np.sum(executed))
         for t in range(len(executed)):
             if not executed[t]:
                 break
             integral = float(ms["integral"][t])
             error = float(ms["error"][t])
             n_active = int(ms["n_active"][t])
+            work_imb = float(ms["work_imb"][t])
+            if recorder.enabled:
+                recorder.gauge("dist.work_imb", work_imb, it=it)
+                recorder.event(
+                    "dist.iter",
+                    it=it,
+                    integral=integral,
+                    error=error,
+                    n_active=n_active,
+                    max_rows=int(ms["max_rows"][t]),
+                )
             history.append(
                 (
                     it,
                     integral,
                     error,
                     n_active,
-                    float(ms["work_imb"][t]),
+                    work_imb,
                     int(ms["max_rows"][t]),
                 )
             )

@@ -90,6 +90,23 @@ def main() -> None:
     )
     ap.add_argument("--device-loop", action="store_true", help="lax.while_loop driver")
     ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="write a Chrome trace-event file of the run (Perfetto-loadable)",
+    )
+    ap.add_argument(
+        "--metrics",
+        default=None,
+        metavar="PATH",
+        help="stream telemetry events to PATH as JSON Lines",
+    )
+    ap.add_argument(
+        "--telemetry-summary",
+        action="store_true",
+        help="print the end-of-run counter/span summary table",
+    )
+    ap.add_argument(
         "--strict",
         action="store_true",
         help="exit non-zero unless the result is finite AND converged "
@@ -148,27 +165,57 @@ def main() -> None:
         redistribution=args.redistribution,
         sync_every=args.sync_every,
     )
+    from repro.telemetry import (
+        NULL,
+        JsonlSink,
+        MemorySink,
+        Recorder,
+        summary_table,
+    )
+    from repro.telemetry.trace import write_chrome_trace
+
+    recorder = NULL
+    trace_sink = None
+    if args.trace or args.metrics or args.telemetry_summary:
+        sinks = []
+        if args.trace:
+            trace_sink = MemorySink()
+            sinks.append(trace_sink)
+        if args.metrics:
+            sinks.append(JsonlSink(args.metrics))
+        recorder = Recorder(sinks=tuple(sinks))
+
     fn = bound.fn if bound is not None else None
     if cfg.resolved_backend() == "vegas":
         from repro.mc import integrate_vegas, integrate_vegas_distributed
 
         if args.devices > 1:
-            res = integrate_vegas_distributed(cfg, fn)
+            res = integrate_vegas_distributed(cfg, fn, recorder=recorder)
             print(res.summary())
             print(f"devices={args.devices} (sample shards split across mesh)")
         else:
-            res = integrate_vegas(cfg, fn)
+            res = integrate_vegas(cfg, fn, recorder=recorder)
             print(res.summary())
     elif args.devices > 1:
-        res = integrate_distributed(cfg, fn)
+        res = integrate_distributed(cfg, fn, recorder=recorder)
         print(res.summary())
         print(f"devices={res.n_devices} mean_imbalance={res.mean_imbalance():.3f}")
     elif args.device_loop:
-        res = integrate_device(cfg, fn)
+        res = integrate_device(cfg, fn, recorder=recorder)
         print(res.summary())
     else:
-        res = integrate(cfg, fn)
+        res = integrate(cfg, fn, recorder=recorder)
         print(res.summary())
+
+    if recorder is not NULL:
+        recorder.close()
+        if args.trace:
+            write_chrome_trace(args.trace, trace_sink.events)
+            print(f"wrote Chrome trace: {args.trace}")
+        if args.metrics:
+            print(f"wrote metrics JSONL: {args.metrics}")
+        if args.telemetry_summary:
+            print(summary_table(recorder))
     exact = None
     if bound is not None:
         exact = bound.exact(args.d)

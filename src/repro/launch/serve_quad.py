@@ -15,10 +15,16 @@ requests, snapshot every admission tick, resume after a crash:
       --graceful --checkpoint-dir /tmp/quad-ckpt
   PYTHONPATH=src python -m repro.launch.serve_quad --d 3 --n-requests 64 \
       --graceful --checkpoint-dir /tmp/quad-ckpt --resume
+Observability (DESIGN.md §8): Chrome trace + metrics stream + summary:
+  PYTHONPATH=src python -m repro.launch.serve_quad --d 3 --n-requests 64 \
+      --devices 4 --trace /tmp/quad-trace.json --metrics /tmp/quad.jsonl \
+      --telemetry-summary
 """
 
 import argparse
 import time
+
+from repro.telemetry.logutil import add_verbosity_flags, setup_logging
 
 
 def main() -> None:
@@ -37,6 +43,14 @@ def main() -> None:
     )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rel-tol", type=float, default=1e-6)
+    ap.add_argument(
+        "--rel-tols",
+        default=None,
+        metavar="TOL[,TOL...]",
+        help="per-request tolerances, cycled over the fleet (e.g. "
+        "'1e-2,1e-8' stripes easy/hard problems across slots — the "
+        "load-imbalanced fleet that exercises ring rebalancing)",
+    )
     ap.add_argument("--capacity", type=int, default=1 << 12)
     ap.add_argument("--batch-slots", type=int, default=16)
     ap.add_argument("--admit-every", type=int, default=1)
@@ -137,9 +151,30 @@ def main() -> None:
         "already-pulled requests are skipped, in-flight slots resume "
         "mid-refinement (bit-identical for slots the crash did not touch)",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="write a Chrome trace-event file (load in chrome://tracing or "
+        "ui.perfetto.dev): one lane per device, spans for compile/dispatch/"
+        "admit/collect/checkpoint, flow arrows for migrations and reroutes",
+    )
+    ap.add_argument(
+        "--metrics",
+        default=None,
+        metavar="PATH",
+        help="stream telemetry events to PATH as JSON Lines",
+    )
+    ap.add_argument(
+        "--telemetry-summary",
+        action="store_true",
+        help="print the end-of-run counter/span summary table",
+    )
+    add_verbosity_flags(ap)
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
+    log = setup_logging(quiet=args.quiet, verbose=args.verbose)
 
     import jax
 
@@ -226,19 +261,29 @@ def main() -> None:
         rng = np.random.default_rng(args.seed)
         thetas = [family.sample_theta(args.d, rng) for _ in range(args.n_requests)]
 
+    rel_tols = None
+    if args.rel_tols:
+        rel_tols = [float(t) for t in args.rel_tols.split(",")]
     requests = [
         QuadRequest(
             req_id=i,
             theta=t,
+            rel_tol=None if rel_tols is None else rel_tols[i % len(rel_tols)],
             deadline_s=args.deadline_s,
             max_evals=args.max_evals,
         )
         for i, t in enumerate(thetas)
     ]
-    print(
-        f"serving {len(requests)} x {family.name} (d={args.d}) through "
-        f"{cfg.batch_slots} slots on {n_devices} device(s) "
-        f"(rebalance={cfg.rebalance}), rel_tol={cfg.rel_tol:g}"
+    log.info(
+        "serving %d x %s (d=%d) through %d slots on %d device(s) "
+        "(rebalance=%s), rel_tol=%s",
+        len(requests),
+        family.name,
+        args.d,
+        cfg.batch_slots,
+        n_devices,
+        cfg.rebalance,
+        args.rel_tols if rel_tols else f"{cfg.rel_tol:g}",
     )
     serve_kwargs = {}
     if args.checkpoint_dir:
@@ -246,6 +291,22 @@ def main() -> None:
 
         serve_kwargs["checkpointer"] = ServiceCheckpointer(args.checkpoint_dir)
         serve_kwargs["checkpoint_every"] = args.checkpoint_every
+
+    from repro.telemetry import JsonlSink, MemorySink, Recorder, summary_table
+    from repro.telemetry.trace import write_chrome_trace
+
+    recorder = None
+    trace_sink = None
+    if args.trace or args.metrics or args.telemetry_summary:
+        sinks = []
+        if args.trace:
+            trace_sink = MemorySink()
+            sinks.append(trace_sink)
+        if args.metrics:
+            sinks.append(JsonlSink(args.metrics))
+        recorder = Recorder(sinks=tuple(sinks))
+        serve_kwargs["recorder"] = recorder
+
     t0 = time.perf_counter()
     n_done = 0
     for res in serve(
@@ -262,12 +323,23 @@ def main() -> None:
             exact = family.exact(args.d, thetas[res.req_id])
             rel = abs(res.integral - exact) / max(abs(exact), 1e-300)
             line += f" true_rel_err={rel:.2e}"
-        print(f"[{n_done}/{len(requests)}] {line}")
+        log.info("[%d/%d] %s", n_done, len(requests), line)
     dt = time.perf_counter() - t0
-    print(
-        f"done: {len(requests)} problems in {dt:.2f}s "
-        f"({len(requests) / dt:.1f} problems/sec)"
+    log.info(
+        "done: %d problems in %.2fs (%.1f problems/sec)",
+        len(requests),
+        dt,
+        len(requests) / dt,
     )
+    if recorder is not None:
+        recorder.close()
+        if args.trace:
+            write_chrome_trace(args.trace, trace_sink.events)
+            log.info("wrote Chrome trace: %s (load in ui.perfetto.dev)", args.trace)
+        if args.metrics:
+            log.info("wrote metrics JSONL: %s", args.metrics)
+        if args.telemetry_summary:
+            log.info("telemetry summary:\n%s", summary_table(recorder))
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ story of the cubature backend.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, Optional, Union
 
@@ -53,6 +54,7 @@ from repro.core.integrands import (
     get_param,
 )
 from repro.mc import grid as grid_lib, stratified
+from repro.telemetry import NULL
 
 # A result needs at least this many accumulated (post-warmup) iterations
 # before it may report convergence: with one sample the weighted average has
@@ -324,22 +326,54 @@ def drive(
     cfg: QuadratureConfig,
     iterate: Callable,
     callback: Optional[Callable[[int, float, float, float], None]] = None,
+    recorder=NULL,
 ) -> VegasResult:
     """The shared host loop: run ``iterate`` (any jitted form of
     :func:`make_iterate` — serial or shard_map'd) to convergence or the
-    iteration cap, one scalar sync per iteration."""
+    iteration cap, one scalar sync per iteration.
+
+    ``recorder`` (host-side only, see DESIGN.md §8) gets one ``mc.iterate``
+    span plus an ``mc.iter`` instant per iteration — the per-iteration
+    chi²/dof the estimator's consistency guard runs on, the accumulated
+    count, and the achieved samples/s — and a one-shot ``mc.config``
+    instant carrying the grid-damping knobs (``mc_alpha``/``mc_beta``).
+    """
     state = init_state(cfg)
     integral = error = chi2 = 0.0
     converged = False
     nonfinite = False
+    recorder.event(
+        "mc.config",
+        samples=cfg.mc_samples,
+        bins=cfg.mc_bins,
+        shards=cfg.mc_shards,
+        warmup=cfg.mc_warmup,
+        alpha=cfg.mc_alpha,
+        beta=cfg.mc_beta,
+    )
     for _ in range(cfg.mc_max_iters):
-        state, m = iterate(state)
-        integral, error, chi2, n_acc = (
-            float(m["integral"]),
-            float(m["error"]),
-            float(m["chi2_dof"]),
-            int(m["n_acc"]),
-        )
+        t0 = time.perf_counter()
+        with recorder.span("mc.iterate"):
+            state, m = iterate(state)
+            integral, error, chi2, n_acc = (
+                float(m["integral"]),
+                float(m["error"]),
+                float(m["chi2_dof"]),
+                int(m["n_acc"]),
+            )
+        if recorder.enabled:
+            dt = time.perf_counter() - t0
+            recorder.event(
+                "mc.iter",
+                it=int(state.it),
+                integral=integral,
+                error=error,
+                chi2_dof=chi2,
+                n_acc=n_acc,
+            )
+            recorder.gauge(
+                "mc.samples_per_s", cfg.mc_samples / max(dt, 1e-9)
+            )
         if callback is not None:
             callback(int(state.it), integral, error, chi2)
         if bool(m["nonfinite"]):
@@ -369,6 +403,7 @@ def integrate_vegas(
     cfg: QuadratureConfig,
     integrand: Optional[Callable] = None,
     callback: Optional[Callable[[int, float, float, float], None]] = None,
+    recorder=NULL,
 ) -> VegasResult:
     """Host-driven VEGAS loop: one jitted iteration, one scalar sync each.
 
@@ -379,7 +414,7 @@ def integrate_vegas(
     """
     cfg = cfg.validate()
     fn = _resolve_serial_fn(cfg, integrand)
-    return drive(cfg, jax.jit(make_iterate(cfg, fn)), callback)
+    return drive(cfg, jax.jit(make_iterate(cfg, fn)), callback, recorder=recorder)
 
 
 # --- the service pool: B independent VEGAS problems in lockstep --------------
@@ -444,6 +479,7 @@ class VegasBatchEngine:
         family: Union[ParamIntegrand, str, None] = None,
         mesh=None,
         devices=None,
+        recorder=None,
     ):
         cfg = cfg.validate()
         if family is None:
@@ -468,14 +504,21 @@ class VegasBatchEngine:
             lambda x: np.zeros(np.shape(x), np.float64),
             family.sample_theta(cfg.d, np.random.default_rng(0)),
         )
+        self.recorder = NULL if recorder is None else recorder
         self._dtype = jnp.dtype(cfg.dtype)
         self._base_key = jax.random.PRNGKey(cfg.mc_seed)
-        self._viterate = jax.vmap(
-            make_iterate(cfg, family.fn, has_theta=True)
-        )
-        self._run = jax.jit(self._make_run())
-        self._admit = jax.jit(self._make_admit())
-        self._release = jax.jit(self._make_release())
+        with self.recorder.span(
+            "engine.build",
+            backend=self.backend,
+            slots=self.n_slots,
+            devices=self.n_devices,
+        ):
+            self._viterate = jax.vmap(
+                make_iterate(cfg, family.fn, has_theta=True)
+            )
+            self._run = jax.jit(self._make_run())
+            self._admit = jax.jit(self._make_admit())
+            self._release = jax.jit(self._make_release())
 
     # --- state ---------------------------------------------------------------
 

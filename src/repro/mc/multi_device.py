@@ -34,6 +34,7 @@ def integrate_vegas_distributed(
     integrand: Optional[Callable] = None,
     devices=None,
     callback: Optional[Callable[[int, float, float, float], None]] = None,
+    recorder=None,
 ):
     """VEGAS with the sample shards sharded across ``devices`` (default all).
 
@@ -53,12 +54,15 @@ def integrate_vegas_distributed(
         make_iterate,
     )
 
+    from repro.telemetry import NULL
+
+    recorder = NULL if recorder is None else recorder
     cfg = cfg.validate()
     devices = list(jax.devices() if devices is None else devices)
     n_dev = len(devices)
     fn = _resolve_serial_fn(cfg, integrand)
     if n_dev == 1:
-        return integrate_vegas(cfg, fn, callback)
+        return integrate_vegas(cfg, fn, callback, recorder=recorder)
     if cfg.mc_shards % n_dev:
         raise ValueError(
             f"mc_shards={cfg.mc_shards} must be divisible by the device "
@@ -69,7 +73,7 @@ def integrate_vegas_distributed(
     iterate = jax.jit(
         _shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()))
     )
-    return drive(cfg, iterate, callback)
+    return drive(cfg, iterate, callback, recorder=recorder)
 
 
 def main() -> None:

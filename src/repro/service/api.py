@@ -60,8 +60,10 @@ def serve(
     per the default :class:`~repro.service.routing.ReroutePolicy` instead of
     being reported as failures.  ``resume=True`` restores the latest service
     snapshot before serving (requires a ``checkpointer``).  Extra keyword
-    arguments (``checkpointer``, ``checkpoint_every``, ``on_tick``, and for
-    the graceful form ``policy``) pass through to the scheduler.
+    arguments (``checkpointer``, ``checkpoint_every``, ``on_tick``,
+    ``recorder`` — a :class:`repro.telemetry.Recorder` for structured
+    telemetry — and for the graceful form ``policy``) pass through to the
+    scheduler.
     """
     if graceful:
         from repro.service.routing import GracefulScheduler

@@ -79,6 +79,7 @@ from repro.core.redistribution import (
 )
 from repro.core.region_store import RegionState
 from repro.core.rules import make_rule
+from repro.telemetry import NULL
 
 AXIS = "dev"
 
@@ -184,6 +185,7 @@ class BatchEngine:
         family: Union[ParamIntegrand, str, None] = None,
         mesh=None,
         devices=None,
+        recorder=NULL,
     ):
         cfg = cfg.validate()
         if family is None:
@@ -192,6 +194,7 @@ class BatchEngine:
             family = get_param(family)
         self.cfg = cfg
         self.family = family
+        self.recorder = recorder
         self.n_slots = cfg.batch_slots
 
         mesh = self._resolve_mesh(cfg, mesh, devices)
@@ -226,13 +229,23 @@ class BatchEngine:
             mesh.devices.flat[0].platform if mesh is not None else None
         )
         donate = donate_argnums(platform)
-        self._iter = self._make_iter()
-        self._step = jax.jit(self._make_step(), donate_argnums=donate)
-        self._run = jax.jit(self._make_run(), donate_argnums=donate)
-        self._admit = jax.jit(self._sharded(self._make_admit()), donate_argnums=donate)
-        self._release = jax.jit(
-            self._sharded(self._make_release()), donate_argnums=donate
-        )
+        # build span only: the jits trace/compile lazily on first dispatch,
+        # which the scheduler's "service.compile" span captures instead
+        with recorder.span(
+            "engine.build",
+            backend=self.backend,
+            slots=self.n_slots,
+            devices=self.n_devices,
+        ):
+            self._iter = self._make_iter()
+            self._step = jax.jit(self._make_step(), donate_argnums=donate)
+            self._run = jax.jit(self._make_run(), donate_argnums=donate)
+            self._admit = jax.jit(
+                self._sharded(self._make_admit()), donate_argnums=donate
+            )
+            self._release = jax.jit(
+                self._sharded(self._make_release()), donate_argnums=donate
+            )
 
     @staticmethod
     def _resolve_mesh(cfg: QuadratureConfig, mesh, devices):

@@ -20,14 +20,18 @@ contract:
 - **deadlines**: an expired SLO evicts with a best-effort partial result
   instead of hanging the slot.
 
+Human progress goes through ``logging`` (``-q``/``-v``); the machine-readable
+``RESULT_JSON:`` line on stdout stays byte-identical for CI consumers.
 Prints one JSON blob on the last line.
 """
 
+import argparse
 import dataclasses
 import json
 import os
-import sys
 import tempfile
+
+from repro.telemetry.logutil import add_verbosity_flags, setup_logging
 
 
 def _full(results):
@@ -66,7 +70,12 @@ def _values(results):
 
 
 def main() -> None:
-    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("n_devices", nargs="?", type=int, default=4)
+    add_verbosity_flags(ap)
+    args = ap.parse_args()
+    log = setup_logging(quiet=args.quiet, verbose=args.verbose)
+    n_dev = args.n_devices
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
         + os.environ.get("XLA_FLAGS", "")
@@ -126,6 +135,7 @@ def main() -> None:
     for c in counts:
         devices = jax.devices()[:c]
         scen = {}
+        log.info("devices=%d ...", c)
 
         # --- fault-free reference -------------------------------------------
         sched = BatchScheduler(cfg, family, devices=devices)
@@ -134,6 +144,7 @@ def main() -> None:
         baseline_by_count[c] = _full(baseline)
         base_vals = _values(baseline)
         scen["baseline"] = {"n_results": len(baseline)}
+        log.debug("  baseline: %d results", len(baseline))
 
         # --- NaN-poisoned integrands ----------------------------------------
         # Three poisoned requests ride along with the ten healthy ones; the
@@ -164,6 +175,11 @@ def main() -> None:
         )
         assert graceful.last_stats["reroutes"] == len(poisoned), (
             graceful.last_stats
+        )
+        log.debug(
+            "  nan_injection: %d quarantines, %d reroutes",
+            graceful.last_stats["quarantines"],
+            graceful.last_stats["reroutes"],
         )
         scen["nan_injection"] = {
             "quarantines": graceful.last_stats["quarantines"],
@@ -199,6 +215,7 @@ def main() -> None:
         )
         for rid in healthy_ids - {0}:
             assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+        log.debug("  slot_corruption: rerouted status=%s", corrupted.status)
         scen["slot_corruption"] = {
             "rerouted_status": corrupted.status,
             "healthy_parity": True,
@@ -241,6 +258,12 @@ def main() -> None:
             assert union == baseline_by_count[c], (union, baseline_by_count[c])
             replayed = len(pre) + len(post) - len(by_id)
             assert replayed > 0, (len(pre), len(post))
+            log.debug(
+                "  crash_resume: pre=%d post=%d replayed=%d",
+                len(pre),
+                len(post),
+                replayed,
+            )
             scen["crash_resume"] = {
                 "pre_crash": len(pre),
                 "post_resume": len(post),
@@ -256,6 +279,7 @@ def main() -> None:
         assert all(r.status == "converged" for r in results), _full(results)[:3]
         midflight = sum(1 for r in results if r.admitted_at > 0)
         assert midflight > 0, _full(results)
+        log.debug("  queue_storm: %d results, %d midflight", len(results), midflight)
         scen["queue_storm"] = {
             "n_results": len(results),
             "midflight_admissions": midflight,
@@ -279,6 +303,7 @@ def main() -> None:
         assert sched.last_stats["deadlines"] == 1, sched.last_stats
         for rid in healthy_ids - {0}:
             assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+        log.debug("  deadline: partial after %d evals", dl.n_evals)
         scen["deadline"] = {"partial_evals": dl.n_evals, "healthy_parity": True}
 
         out["scenarios"][f"devices_{c}"] = scen

@@ -30,12 +30,8 @@ from typing import Iterable, Iterator, Optional, Union
 
 from repro.core.config import QuadratureConfig
 from repro.core.integrands import ParamIntegrand
-from repro.service.scheduler import (
-    _ZERO_STATS,
-    BatchScheduler,
-    QuadRequest,
-    QuadResult,
-)
+from repro.service.scheduler import BatchScheduler, QuadRequest, QuadResult
+from repro.telemetry import NULL, ServiceStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,8 +68,12 @@ class GracefulScheduler:
     pool collects them; retried requests are yielded after their final
     attempt, with provenance filled in.
 
-    ``last_stats`` aggregates the host-loop counters of every pool plus
-    ``reroutes`` (fallback re-admissions, both kinds).
+    ``last_stats`` aggregates the host-loop counters of every pool —
+    field-wise over the shared :class:`~repro.telemetry.ServiceStats`
+    schema, so a counter added to one pool can no longer silently vanish
+    from the aggregate — plus ``reroutes`` (fallback re-admissions, both
+    kinds).  ``recorder`` is shared with every pool; re-admissions emit
+    ``service.reroute`` flow events (drawn as arrows in the Chrome trace).
     """
 
     def __init__(
@@ -83,16 +83,28 @@ class GracefulScheduler:
         mesh=None,
         devices=None,
         policy: Optional[ReroutePolicy] = None,
+        recorder=NULL,
         **scheduler_kwargs,
     ):
         self.policy = (policy or ReroutePolicy()).validate()
+        self.recorder = recorder
         self.primary = BatchScheduler(
-            cfg, family, mesh=mesh, devices=devices, **scheduler_kwargs
+            cfg,
+            family,
+            mesh=mesh,
+            devices=devices,
+            recorder=recorder,
+            **scheduler_kwargs,
         )
         self.cfg = self.primary.cfg
         self.family = self.primary.engine.family
         self._vegas_pool: Optional[BatchScheduler] = None
-        self.last_stats: dict = dict(_ZERO_STATS, reroutes=0)
+        self._stats = ServiceStats()
+
+    @property
+    def last_stats(self) -> dict:
+        """Dict view of the latest run's aggregated stats (compat)."""
+        return self._stats.as_dict()
 
     def _vegas(self) -> BatchScheduler:
         """The fallback MC pool, built lazily (it compiles its own fleet)."""
@@ -100,19 +112,37 @@ class GracefulScheduler:
             cfg = dataclasses.replace(
                 self.cfg, backend="vegas", service_devices=1
             )
-            self._vegas_pool = BatchScheduler(cfg, self.family)
+            self._vegas_pool = BatchScheduler(
+                cfg, self.family, recorder=self.recorder
+            )
         return self._vegas_pool
 
     def serve(
         self, requests: Iterable[QuadRequest], resume: bool = False
     ) -> Iterator[QuadResult]:
         policy = self.policy
-        stats = dict(_ZERO_STATS, reroutes=0)
-        self.last_stats = stats
+        rec = self.recorder
+        stats = ServiceStats()
+        self._stats = stats
 
         def merge(pool_stats: dict) -> None:
-            for key, val in pool_stats.items():
-                stats[key] = stats.get(key, 0) + val
+            # field-wise over the typed schema: an unknown key coming back
+            # from a pool is a loud error, not a silently dropped counter
+            stats.merge(ServiceStats.from_dict(pool_stats))
+
+        def record_reroutes(results: list, to_backend: str) -> None:
+            stats.add("reroutes", len(results))
+            rec.count("service.reroutes", len(results))
+            if rec.enabled:
+                for r in results:
+                    rec.flow(
+                        "service.reroute",
+                        None,
+                        None,
+                        req_id=r.req_id,
+                        from_status=r.status,
+                        to_backend=to_backend,
+                    )
 
         by_id: dict[int, QuadRequest] = {}
 
@@ -142,7 +172,7 @@ class GracefulScheduler:
         # dedicated small pass beats holding primary slots hostage.  Each
         # pool's serve() builds fresh state, so reusing a scheduler is free.
         if reroute:
-            stats["reroutes"] += len(reroute)
+            record_reroutes(reroute, "vegas")
             prior = {r.req_id: r for r in reroute}
             pool = self._vegas()
             for res in pool.serve([by_id[r.req_id] for r in reroute]):
@@ -154,7 +184,7 @@ class GracefulScheduler:
             merge(pool.last_stats)
 
         if relax:
-            stats["reroutes"] += len(relax)
+            record_reroutes(relax, primary_backend)
             prior = {r.req_id: r for r in relax}
             cfg = self.cfg
             retries = [

@@ -61,6 +61,7 @@ import numpy as np
 from repro.core.config import QuadratureConfig
 from repro.core.integrands import ParamIntegrand
 from repro.service.batch_engine import BatchEngine, BatchState
+from repro.telemetry import NULL, ServiceStats
 
 
 def make_engine(
@@ -68,6 +69,7 @@ def make_engine(
     family: Union[ParamIntegrand, str, None] = None,
     mesh=None,
     devices=None,
+    recorder=NULL,
 ):
     """Engine for ``cfg``'s resolved backend.
 
@@ -81,8 +83,10 @@ def make_engine(
     if cfg.resolved_backend() == "vegas":
         from repro.mc.engine import VegasBatchEngine
 
-        return VegasBatchEngine(cfg, family, mesh=mesh, devices=devices)
-    return BatchEngine(cfg, family, mesh=mesh, devices=devices)
+        return VegasBatchEngine(
+            cfg, family, mesh=mesh, devices=devices, recorder=recorder
+        )
+    return BatchEngine(cfg, family, mesh=mesh, devices=devices, recorder=recorder)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,15 +141,6 @@ class QuadResult:
         )
 
 
-_ZERO_STATS = {
-    "iterations": 0,
-    "dispatches": 0,
-    "migrations": 0,
-    "quarantines": 0,
-    "deadlines": 0,
-}
-
-
 def encode_request(req: QuadRequest) -> dict:
     """JSON-able form of a request (theta leaves as float64 lists).
 
@@ -190,12 +185,21 @@ def decode_request(obj: dict, theta_template) -> QuadRequest:
 class BatchScheduler:
     """Drives a :class:`BatchEngine` over an arbitrary stream of requests.
 
-    After :meth:`serve` completes, :attr:`last_stats` holds host-loop
-    counters for the run: ``iterations`` (fleet iterations), ``dispatches``
-    (fused engine launches), ``migrations`` (problems moved between devices
-    by the cyclic rebalancer), ``quarantines`` (slots collected with a
-    ``nonfinite`` status) and ``deadlines`` (slots evicted on an expired
-    SLO).
+    After :meth:`serve` completes, :attr:`last_stats` is a dict view of the
+    run's :class:`~repro.telemetry.ServiceStats` — ``iterations`` (fleet
+    iterations), ``dispatches`` (fused engine launches), ``admissions``,
+    ``collections``, ``migrations`` (problems moved between devices by the
+    cyclic rebalancer), ``quarantines`` (slots collected with a
+    ``nonfinite`` status), ``deadlines`` (slots evicted on an expired SLO)
+    and ``checkpoints``.
+
+    ``recorder`` (a :class:`repro.telemetry.Recorder`; default the no-op
+    :data:`~repro.telemetry.NULL`) receives the structured event stream:
+    spans around compile/dispatch/admit/collect/checkpoint, per-device
+    ``service.n_live`` occupancy gauges at every executed iteration, and
+    flow events for slot migrations.  Everything is recorded host-side at
+    dispatch boundaries, so telemetry on/off cannot change any result bit
+    (see DESIGN.md §8).
 
     ``checkpointer`` (a :class:`repro.service.checkpoint.ServiceCheckpointer`)
     snapshots the stacked engine state + the slot -> request map every
@@ -216,7 +220,9 @@ class BatchScheduler:
         checkpointer=None,
         checkpoint_every: int = 0,
         on_tick: Optional[Callable] = None,
+        recorder=NULL,
     ):
+        self.recorder = recorder
         if engine is not None:
             if mesh is not None or devices is not None:
                 raise ValueError(
@@ -227,7 +233,9 @@ class BatchScheduler:
                 )
             self.engine = engine
         else:
-            self.engine = make_engine(cfg, family, mesh=mesh, devices=devices)
+            self.engine = make_engine(
+                cfg, family, mesh=mesh, devices=devices, recorder=recorder
+            )
         self.cfg = self.engine.cfg
         if checkpoint_every < 0:
             raise ValueError(f"checkpoint_every must be >= 0, got {checkpoint_every}")
@@ -236,7 +244,13 @@ class BatchScheduler:
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.on_tick = on_tick
-        self.last_stats: dict = dict(_ZERO_STATS)
+        self._stats = ServiceStats()
+        self._warm = False  # first-ever dispatch traces + compiles the step
+
+    @property
+    def last_stats(self) -> dict:
+        """Dict view of the latest run's :class:`ServiceStats` (compat)."""
+        return self._stats.as_dict()
 
     def serve(
         self, requests: Iterable[QuadRequest], resume: bool = False
@@ -265,11 +279,28 @@ class BatchScheduler:
         slot_wall = [0.0] * B  # admission wall clock, for deadline_s
         pulled_ids: set[int] = set()
         skip_ids: set[int] = set()
-        stats = dict(_ZERO_STATS)
-        self.last_stats = stats
+        rec = self.recorder
+        stats = ServiceStats()
+        self._stats = stats
+
+        def bump(counter: str, n: int = 1) -> None:
+            # one typed schema + one event stream: every host-loop counter
+            # bump lands in ServiceStats AND (when enabled) the recorder
+            stats.add(counter, n)
+            rec.count(f"service.{counter}", n)
+
         state = engine.init()
         it = 0
         ticks = 0  # admission passes completed (checkpoint cadence unit)
+        rec.event(
+            "service.start",
+            backend=engine.backend,
+            slots=B,
+            devices=engine.n_devices,
+            sync_every=cfg.sync_every,
+            admit_every=cfg.admit_every,
+            resume=resume,
+        )
 
         if resume:
             if self.checkpointer is None:
@@ -277,7 +308,7 @@ class BatchScheduler:
             state, meta = self.checkpointer.restore(engine)
             it = int(meta["it"])
             ticks = int(meta["ticks"])
-            stats.update(meta["stats"])
+            stats.merge(ServiceStats.from_dict(meta["stats"]))
             pulled_ids = set(meta["pulled_ids"])
             skip_ids = set(pulled_ids)
             for entry in meta["slots"]:
@@ -330,16 +361,28 @@ class BatchScheduler:
             return order
 
         def admit_free_slots(state: BatchState) -> BatchState:
-            for slot in admission_order():
-                req = pull()
-                if req is None:
-                    break
-                state = engine.admit(
-                    state, slot, req.theta, req.rel_tol, req.abs_tol
-                )
-                slot_req[slot] = req
-                slot_admitted[slot] = it
-                slot_wall[slot] = time.monotonic()
+            with rec.span("service.admit", it=it) as sp:
+                n_admitted = 0
+                for slot in admission_order():
+                    req = pull()
+                    if req is None:
+                        break
+                    state = engine.admit(
+                        state, slot, req.theta, req.rel_tol, req.abs_tol
+                    )
+                    slot_req[slot] = req
+                    slot_admitted[slot] = it
+                    slot_wall[slot] = time.monotonic()
+                    n_admitted += 1
+                    bump("admissions")
+                    rec.event(
+                        "service.admission",
+                        lane=slot // per_dev,
+                        req_id=req.req_id,
+                        slot=slot,
+                        it=it,
+                    )
+                sp["admitted"] = n_admitted
             return state
 
         def admission_tick(state: BatchState) -> BatchState:
@@ -360,7 +403,7 @@ class BatchScheduler:
                 meta = {
                     "it": it,
                     "ticks": ticks,
-                    "stats": stats,
+                    "stats": stats.as_dict(),
                     "pulled_ids": sorted(pulled_ids),
                     "slots": [
                         {
@@ -372,7 +415,9 @@ class BatchScheduler:
                         if slot_req[s] is not None
                     ],
                 }
-                self.checkpointer.save(it, state, meta)
+                with rec.span("service.checkpoint", it=it, ticks=ticks):
+                    self.checkpointer.save(it, state, meta)
+                bump("checkpoints")
             return state
 
         def apply_moves(rows: np.ndarray) -> None:
@@ -392,7 +437,17 @@ class BatchScheduler:
                 slot_admitted[dst] = snapshot_adm[src]
                 slot_wall[dst] = snapshot_wall[src]
                 slot_req[src] = None
-            stats["migrations"] += len(valid)
+                if rec.enabled:
+                    rec.flow(
+                        "service.migrate",
+                        src // per_dev,
+                        dst // per_dev,
+                        req_id=snapshot_req[src].req_id,
+                        src_slot=src,
+                        dst_slot=dst,
+                        it=it,
+                    )
+            bump("migrations", len(valid))
 
         if not resume:
             # on resume the snapshot was taken at a tick boundary, right
@@ -409,12 +464,45 @@ class BatchScheduler:
             max_steps = cfg.sync_every
             if not exhausted and any(r is None for r in slot_req):
                 max_steps = min(max_steps, cfg.admit_every - it % cfg.admit_every)
-            state, ms, executed, moved = engine.run(state, max_steps, it)
-            ms, executed, moved = jax.device_get((ms, executed, moved))
-            k = int(np.sum(executed))
+            it0 = it
+            # the first-ever dispatch traces + compiles the fused step, so
+            # its span is the trace's "compile" lane entry
+            with rec.span(
+                "service.dispatch" if self._warm else "service.compile",
+                it=it,
+                max_steps=max_steps,
+            ) as sp:
+                state, ms, executed, moved = engine.run(state, max_steps, it)
+                ms, executed, moved = jax.device_get((ms, executed, moved))
+                k = int(np.sum(executed))
+                sp["executed"] = k
+            self._warm = True
             assert k >= 1, "fused dispatch executed no iterations"
-            stats["dispatches"] += 1
-            stats["iterations"] += k
+            bump("dispatches")
+            bump("iterations", k)
+            if rec.enabled:
+                # Per-device live-slot occupancy at every executed iteration
+                # (the Fig. 4b input) — derived purely from the read-back
+                # metrics, after the dispatch returned: nothing here can
+                # perturb the device computation.
+                occ = np.asarray(ms["occupied"][:k]).reshape(
+                    k, engine.n_devices, per_dev
+                )
+                n_live = occ.sum(axis=2)
+                for t in range(k):
+                    for dev in range(engine.n_devices):
+                        rec.gauge(
+                            "service.n_live",
+                            int(n_live[t, dev]),
+                            lane=dev,
+                            it=it0 + t + 1,
+                        )
+                if "window" in ms:  # eval-window rung (cubature engine)
+                    rec.gauge(
+                        "service.window",
+                        int(np.max(ms["window"][k - 1])),
+                        it=it0 + k,
+                    )
             for t in range(k - 1):
                 it += 1
                 apply_moves(moved[t])
@@ -427,28 +515,47 @@ class BatchScheduler:
                 if done[s] and occupied[s] and slot_req[s] is not None
             ]
             # req_id order: deterministic across device counts (collection
-            # within one iteration has no inherent slot order anyway)
-            for req_id, slot in sorted(finished):
-                status = engine.status_of(
-                    bool(ms["converged"][k - 1][slot]),
-                    int(ms["n_active"][k - 1][slot]),
-                    int(ms["it"][k - 1][slot]),
-                    bool(ms["overflowed"][k - 1][slot]),
-                    bool(ms["nonfinite"][k - 1][slot]),
-                )
-                if status == "nonfinite":
-                    stats["quarantines"] += 1
-                yield QuadResult(
-                    req_id=req_id,
-                    integral=float(ms["integral"][k - 1][slot]),
-                    error=float(ms["error"][k - 1][slot]),
-                    status=status,
-                    iterations=int(ms["it"][k - 1][slot]),
-                    n_evals=float(ms["n_evals"][k - 1][slot]),
-                    admitted_at=int(slot_admitted[slot]),
-                    finished_at=it,
-                    backend=engine.backend,
-                )
+            # within one iteration has no inherent slot order anyway).
+            # Results are built inside the collect span and yielded after
+            # it closes — a span held open across a generator yield would
+            # measure the consumer, not the collection.
+            collected: list[QuadResult] = []
+            if finished:
+                with rec.span("service.collect", it=it, n=len(finished)):
+                    for req_id, slot in sorted(finished):
+                        status = engine.status_of(
+                            bool(ms["converged"][k - 1][slot]),
+                            int(ms["n_active"][k - 1][slot]),
+                            int(ms["it"][k - 1][slot]),
+                            bool(ms["overflowed"][k - 1][slot]),
+                            bool(ms["nonfinite"][k - 1][slot]),
+                        )
+                        bump("collections")
+                        if status == "nonfinite":
+                            bump("quarantines")
+                        rec.event(
+                            "service.collected",
+                            lane=slot // per_dev,
+                            req_id=req_id,
+                            slot=slot,
+                            status=status,
+                            it=it,
+                        )
+                        collected.append(
+                            QuadResult(
+                                req_id=req_id,
+                                integral=float(ms["integral"][k - 1][slot]),
+                                error=float(ms["error"][k - 1][slot]),
+                                status=status,
+                                iterations=int(ms["it"][k - 1][slot]),
+                                n_evals=float(ms["n_evals"][k - 1][slot]),
+                                admitted_at=int(slot_admitted[slot]),
+                                finished_at=it,
+                                backend=engine.backend,
+                            )
+                        )
+            for res in collected:
+                yield res
             # migrations of the final executed iteration happened *after* its
             # metrics snapshot (and done slots never migrate), so the map
             # update follows collection
@@ -476,7 +583,16 @@ class BatchScheduler:
                 )
                 if not (over_wall or over_evals):
                     continue
-                stats["deadlines"] += 1
+                bump("deadlines")
+                rec.event(
+                    "service.deadline",
+                    lane=slot // per_dev,
+                    req_id=req.req_id,
+                    slot=slot,
+                    it=it,
+                    over_wall=over_wall,
+                    over_evals=over_evals,
+                )
                 yield QuadResult(
                     req_id=req.req_id,
                     integral=float(ms["integral"][k - 1][slot]),
@@ -506,3 +622,5 @@ class BatchScheduler:
             raise RuntimeError(
                 f"scheduler exited with queued requests (req_id={leftover.req_id})"
             )
+        rec.event("service.drain", it=it, **stats.as_dict())
+        rec.flush()

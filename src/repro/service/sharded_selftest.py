@@ -11,12 +11,21 @@ mid-flight admission exercised, with the cyclic problem rebalancer both
 on and off (a drain-heavy case asserts it actually migrates), and with the
 windowed advance both on (the default) and off — so the sharded service
 provably replays the same trajectories when the whole iteration is
-windowed.  Prints one JSON blob on the last line.
+windowed.  With a recorder attached the drain-heavy case must additionally
+keep bit-parity (telemetry never perturbs trajectories), emit at least one
+migration flow pair into a structurally valid Chrome trace, and produce an
+idle-fraction timeline that matches the fig-4b formula recomputed by hand.
+Human progress goes through ``logging`` (``-q``/``-v``); the machine-readable
+``RESULT_JSON:`` line on stdout stays byte-identical for CI consumers.
+Prints one JSON blob on the last line.
 """
 
+import argparse
 import json
 import os
-import sys
+import tempfile
+
+from repro.telemetry.logutil import add_verbosity_flags, setup_logging
 
 
 def _tuples(results):
@@ -36,7 +45,12 @@ def _tuples(results):
 
 
 def main() -> None:
-    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("n_devices", nargs="?", type=int, default=4)
+    add_verbosity_flags(ap)
+    args = ap.parse_args()
+    log = setup_logging(quiet=args.quiet, verbose=args.verbose)
+    n_dev = args.n_devices
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
         + os.environ.get("XLA_FLAGS", "")
@@ -112,6 +126,7 @@ def main() -> None:
 
     out = {"n_devices": n_dev, "device_counts": counts, "cases": {}}
     for name, (cfg, make_reqs) in cases.items():
+        log.info("case %s ...", name)
         per_count = {}
         migrations = {}
         for c in counts:
@@ -119,6 +134,12 @@ def main() -> None:
             results = list(sched.serve(make_reqs()))
             per_count[c] = _tuples(results)
             migrations[c] = sched.last_stats["migrations"]
+            log.debug(
+                "  devices=%d: %d results, %d migrations",
+                c,
+                len(results),
+                migrations[c],
+            )
         # rebalancing must be a pure placement change: identical results off
         off = BatchScheduler(
             QuadratureConfig(**{**cfg.__dict__, "rebalance": "off"}),
@@ -151,6 +172,71 @@ def main() -> None:
             "n_results": len(ref),
             "admitted_at": admitted,
         }
+
+        if name == "rebalanced":
+            # recorder-attached replay of the migration-heavy case on the
+            # biggest mesh: telemetry must not perturb a single bit, the
+            # Chrome trace must be structurally valid with >=1 migration
+            # flow pair, and the idle-fraction timeline must equal the
+            # fig-4b formula recomputed by hand from the raw gauge events
+            from repro.telemetry import MemorySink, Recorder, loadview
+            from repro.telemetry.check import check_trace
+            from repro.telemetry.trace import write_chrome_trace
+
+            c = counts[-1]
+            sink = MemorySink()
+            rec = Recorder(sinks=(sink,))
+            sched = BatchScheduler(
+                cfg, family, devices=jax.devices()[:c], recorder=rec
+            )
+            tuples = _tuples(list(sched.serve(make_reqs())))
+            rec.close()
+            assert tuples == per_count[c], (
+                "recorder-on run diverged from recorder-off run",
+                [a for a, b in zip(tuples, per_count[c]) if a != b][:2],
+            )
+            flows = [
+                e
+                for e in sink.events
+                if e["kind"] == "flow_begin" and e["name"] == "service.migrate"
+            ]
+            assert len(flows) == sched.last_stats["migrations"] > 0, (
+                len(flows),
+                sched.last_stats,
+            )
+            per_dev = cfg.batch_slots // c
+            tl = loadview.occupancy_from_events(sink.events)
+            assert tl.devices == list(range(c)), tl.devices
+            idle = loadview.idle_fraction(tl, per_dev)
+            # hand recompute straight from the gauge events (fig-4b: idle
+            # fraction = 1 - occupied slot-iterations / total capacity)
+            occ = {}
+            its = set()
+            for e in sink.events:
+                if e["kind"] == "gauge" and e["name"] == "service.n_live":
+                    occ.setdefault(e["lane"], 0.0)
+                    occ[e["lane"]] += e["value"]
+                    its.add(e["it"])
+            for dev in range(c):
+                hand = 1.0 - occ.get(dev, 0.0) / (len(its) * per_dev)
+                assert abs(idle[dev] - hand) < 1e-12, (dev, idle[dev], hand)
+            with tempfile.TemporaryDirectory() as tmp:
+                path = os.path.join(tmp, "trace.json")
+                write_chrome_trace(path, sink.events)
+                problems = check_trace(path, n_devices=c, expect_flow=True)
+                assert not problems, problems
+            out["cases"][name]["telemetry"] = {
+                "devices": c,
+                "parity": True,
+                "migration_flows": len(flows),
+                "idle_fraction": [idle[d] for d in range(c)],
+                "trace_check": "ok",
+            }
+            log.debug(
+                "  telemetry replay: %d migration flows, idle=%s",
+                len(flows),
+                [round(idle[d], 3) for d in range(c)],
+            )
 
     # the drain-heavy case must actually exercise migration on a real ring
     for c in counts[1:]:

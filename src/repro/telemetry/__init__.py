@@ -1,0 +1,35 @@
+"""Dependency-free observability for the quadrature serving stack.
+
+See DESIGN.md §8.  The subsystem is host-side only: events are recorded
+strictly at dispatch boundaries, never inside traced code, so telemetry
+on/off cannot perturb any compiled computation (bit-parity is asserted in
+``tests/test_telemetry.py``).
+
+- :mod:`~repro.telemetry.core` — :class:`Recorder` (counters, gauges,
+  histograms, nestable spans, flows) and the no-op :data:`NULL`;
+- :mod:`~repro.telemetry.sinks` — JSONL / in-memory sinks, summary table;
+- :mod:`~repro.telemetry.trace` — Chrome trace-event (Perfetto) export;
+- :mod:`~repro.telemetry.loadview` — per-device occupancy / idle-fraction
+  / Fig. 4b imbalance timelines derived from recorded events;
+- :mod:`~repro.telemetry.stats` — the typed :class:`ServiceStats` schema;
+- :mod:`~repro.telemetry.check` — artifact validator (CI smoke checker);
+- :mod:`~repro.telemetry.logutil` — shared CLI logging setup.
+"""
+
+from repro.telemetry.core import NULL, NullRecorder, Recorder
+from repro.telemetry.sinks import JsonlSink, MemorySink, read_jsonl, summary_table
+from repro.telemetry.stats import ServiceStats
+from repro.telemetry.trace import to_chrome, write_chrome_trace
+
+__all__ = [
+    "NULL",
+    "NullRecorder",
+    "Recorder",
+    "JsonlSink",
+    "MemorySink",
+    "read_jsonl",
+    "summary_table",
+    "ServiceStats",
+    "to_chrome",
+    "write_chrome_trace",
+]

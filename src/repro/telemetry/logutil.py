@@ -1,0 +1,54 @@
+"""Logging setup shared by the CLIs and selftests.
+
+One convention everywhere: human-readable progress goes through
+``logging`` (so ``--quiet``/``--verbose`` work uniformly), while
+machine-readable ``RESULT_JSON:`` lines stay bare ``print()`` calls —
+they are a wire format consumed by CI/pytest subprocess harnesses and
+must remain byte-identical regardless of verbosity
+(``tests/test_no_print.py`` enforces exactly this split).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+import sys
+
+
+def add_verbosity_flags(ap: argparse.ArgumentParser) -> None:
+    """Attach the standard ``--quiet`` / ``--verbose`` pair."""
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument(
+        "-q",
+        "--quiet",
+        action="store_true",
+        help="suppress progress output (warnings and RESULT_JSON lines only)",
+    )
+    g.add_argument(
+        "-v",
+        "--verbose",
+        action="store_true",
+        help="debug-level progress output",
+    )
+
+
+def setup_logging(
+    quiet: bool = False, verbose: bool = False, name: str = "repro"
+) -> logging.Logger:
+    """Configure and return the CLI logger (message-only format, stdout).
+
+    Messages go to stdout (not stderr) so existing shell pipelines around
+    the launchers keep seeing the same stream they did when these were
+    ``print()`` calls.
+    """
+    level = (
+        logging.WARNING if quiet else logging.DEBUG if verbose else logging.INFO
+    )
+    logger = logging.getLogger(name)
+    logger.setLevel(level)
+    if not logger.handlers:
+        handler = logging.StreamHandler(sys.stdout)
+        handler.setFormatter(logging.Formatter("%(message)s"))
+        logger.addHandler(handler)
+    logger.propagate = False
+    return logger

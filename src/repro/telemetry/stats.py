@@ -1,0 +1,64 @@
+"""ServiceStats: the one typed schema for service host-loop counters.
+
+Before this existed, ``_ZERO_STATS`` was a dict literal in
+``service/scheduler.py`` that ``service/routing.py`` imported, extended
+with ``reroutes``, and merged by hand — so a counter added to one pool
+silently vanished from the graceful aggregate (the merge loop only knew
+the keys it was written against).  Here the schema is a frozen-field
+dataclass: scheduler, graceful router, and the checkpoint meta sidecar
+all share it, ``merge`` is field-wise by construction, and an unknown key
+in a restored checkpoint is a loud error instead of silent drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Host-loop counters for one service run (see DESIGN.md §8).
+
+    All counters are integers; ``as_dict`` is the compatibility view
+    exposed as ``BatchScheduler.last_stats`` / ``GracefulScheduler.last_stats``.
+    """
+
+    iterations: int = 0  # fleet iterations executed (all slots advance together)
+    dispatches: int = 0  # fused engine launches
+    admissions: int = 0  # requests admitted into slots (incl. retries)
+    collections: int = 0  # terminal slots collected (any status)
+    migrations: int = 0  # problems moved between devices by the rebalancer
+    quarantines: int = 0  # slots collected with status "nonfinite"
+    deadlines: int = 0  # slots evicted on an expired SLO
+    checkpoints: int = 0  # service snapshots written
+    reroutes: int = 0  # fallback re-admissions (graceful layer)
+
+    def add(self, name: str, n: int = 1) -> int:
+        """Bump counter ``name`` by ``n``; unknown names raise AttributeError."""
+        value = getattr(self, name) + n
+        setattr(self, name, value)
+        return value
+
+    def merge(self, other: "ServiceStats") -> None:
+        """Field-wise accumulate ``other`` into ``self``."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, obj: Dict[str, int]) -> "ServiceStats":
+        """Rebuild from a stored dict (checkpoint meta sidecar).
+
+        Missing keys default to 0 (snapshots written before a counter
+        existed); unknown keys raise — that is the key-drift guard.
+        """
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(obj) - known
+        if unknown:
+            raise ValueError(
+                f"unknown ServiceStats keys {sorted(unknown)}; known: {sorted(known)}"
+            )
+        return cls(**{k: int(v) for k, v in obj.items()})

@@ -1,0 +1,62 @@
+"""Lint: no bare ``print(`` in ``src/repro/`` (tier-1).
+
+Human-facing progress goes through ``logging`` (see
+``repro.telemetry.logutil``), machine-facing output is either the
+``RESULT_JSON:`` wire format the selftests emit (one JSON blob on the last
+stdout line, parsed by CI and the test suite) or a CLI entry point whose
+stdout *is* its interface.  Everything else printing to stdout is a bug:
+it interleaves with the RESULT_JSON protocol and cannot be silenced by
+``--quiet``.
+"""
+
+import os
+import re
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_REPO, "src", "repro")
+
+#: CLI entry points whose stdout is the user interface (argparse tools that
+#: write results/diagnostics directly); relative to src/repro/
+ALLOWED_FILES = {
+    "launch/integrate.py",
+    "launch/dryrun.py",
+    "launch/serve.py",
+    "launch/train.py",
+    "telemetry/check.py",
+}
+
+_PRINT = re.compile(r"^\s*print\(")
+
+
+def test_no_bare_print_in_src():
+    offenders = []
+    for dirpath, _dirnames, filenames in os.walk(_SRC):
+        for fname in filenames:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, _SRC)
+            if rel in ALLOWED_FILES:
+                continue
+            with open(path, encoding="utf-8") as fh:
+                for lineno, line in enumerate(fh, 1):
+                    if _PRINT.match(line) and "RESULT_JSON" not in line:
+                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "bare print() in src/repro/ — route through logging "
+        "(repro.telemetry.logutil) or add a RESULT_JSON: prefix:\n"
+        + "\n".join(offenders)
+    )
+
+
+def test_serve_quad_is_print_free():
+    """The serving CLI is fully on logging + telemetry sinks; keep it that
+    way (it used to print per-result lines that ``--quiet`` couldn't stop)."""
+    path = os.path.join(_SRC, "launch", "serve_quad.py")
+    with open(path, encoding="utf-8") as fh:
+        offenders = [
+            f"{lineno}: {line.strip()}"
+            for lineno, line in enumerate(fh, 1)
+            if _PRINT.match(line)
+        ]
+    assert not offenders, offenders

@@ -66,6 +66,19 @@ def test_problem_migration_fires_on_real_rings(selftest_output):
     assert migrations["2"] > 0 and migrations["4"] > 0, migrations
 
 
+def test_recorder_replay_keeps_parity_and_traces_migrations(selftest_output):
+    """The selftest re-runs the drain-heavy case with a Recorder attached:
+    bit-parity with the recorder-off run (4 devices), >=1 migration flow in
+    a structurally valid Chrome trace, and an idle-fraction timeline that
+    matches the fig-4b formula recomputed from the raw gauge events."""
+    tel = selftest_output["cases"]["rebalanced"]["telemetry"]
+    assert tel["parity"] and tel["trace_check"] == "ok"
+    assert tel["devices"] == 4
+    assert tel["migration_flows"] > 0
+    assert len(tel["idle_fraction"]) == 4
+    assert all(0.0 <= f < 1.0 for f in tel["idle_fraction"])
+
+
 # --- CLI fail-fast validation (launch.serve_quad) ------------------------------
 
 
