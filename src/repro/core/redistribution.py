@@ -86,6 +86,32 @@ def ring_perms(n: int, shift: int) -> tuple[list, list]:
 _ring_perms = ring_perms  # backward-compatible private alias
 
 
+def check_ring_invariants(n_devices: int) -> None:
+    """Assert the schedule/permutation invariants for an ``n_devices`` ring.
+
+    Every shift in :func:`make_schedule` must be a nonzero ring distance
+    strictly below ``n_devices``, with no duplicates, and each of its
+    :func:`ring_perms` directions must be a bijection on ranks with the two
+    directions mutually inverse.  The trivial ring (``n_devices <= 1``) has
+    an empty schedule.  Used by the chaos selftest to certify that an
+    elastically shrunken mesh still presents a valid cyclic-pairing topology
+    to the compiled collectives.
+    """
+    schedule = make_schedule(n_devices)
+    if n_devices <= 1:
+        assert schedule == (), schedule
+        return
+    assert len(set(schedule)) == len(schedule), schedule
+    ranks = list(range(n_devices))
+    for shift in schedule:
+        assert 0 < shift < n_devices, (shift, n_devices)
+        down, up = ring_perms(n_devices, shift)
+        for perm in (down, up):
+            assert sorted(s for s, _ in perm) == ranks, perm
+            assert sorted(d for _, d in perm) == ranks, perm
+        assert {(d, s) for s, d in down} == set(up), (down, up)
+
+
 def exchange_pair_stats(
     stats: jnp.ndarray, axis_name: str, n_devices: int, shift: int
 ) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -541,6 +541,15 @@ class VegasBatchEngine:
             admit_seq=jnp.zeros((B,), jnp.int32),
         )
 
+    def place(self, state):
+        """Re-place a full logical fleet state on this (single-device) engine.
+
+        Protocol parity with :meth:`BatchEngine.place`; the MC fleet's slot
+        axis is never mesh-sharded (samples are, inside the iterate), so this
+        is a plain host-to-device transfer.
+        """
+        return jax.tree.map(jnp.asarray, state)
+
     def _make_admit(self):
         fresh = init_state(self.cfg)
         base_key = self._base_key

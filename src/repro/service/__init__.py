@@ -14,7 +14,11 @@ Layers (bottom up):
 - :mod:`repro.service.scheduler` — the continuous-batching loop: a request
   queue feeding batch slots, mid-flight admission into slots freed by
   converged problems (targeting the device that owns the freed slot),
-  eviction of capacity-saturated slots;
+  eviction of capacity-saturated slots; every dispatch runs under a
+  device-loss watchdog that retries transient faults and, on permanent
+  failure, evacuates the dead device's slots and rebuilds the engine on
+  the surviving sub-mesh (regrowing later — elastic fleet resilience,
+  DESIGN.md §6);
 - :mod:`repro.service.routing` — graceful degradation: fallback re-routing
   of degraded requests (capacity/nonfinite evictions to the VEGAS pool,
   tolerance-starved requests to a relaxed retry) with attempt provenance;
@@ -31,12 +35,20 @@ from repro.service.api import integrate_batch, serve
 from repro.service.batch_engine import BatchEngine, BatchState
 from repro.service.checkpoint import ServiceCheckpointer
 from repro.service.routing import GracefulScheduler, ReroutePolicy
-from repro.service.scheduler import BatchScheduler, QuadRequest, QuadResult
+from repro.service.scheduler import (
+    BatchScheduler,
+    DeviceLostError,
+    DispatchTimeout,
+    QuadRequest,
+    QuadResult,
+)
 
 __all__ = [
     "BatchEngine",
     "BatchScheduler",
     "BatchState",
+    "DeviceLostError",
+    "DispatchTimeout",
     "GracefulScheduler",
     "QuadRequest",
     "QuadResult",

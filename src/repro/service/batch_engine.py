@@ -318,6 +318,22 @@ class BatchEngine:
             state = jax.device_put(state, NamedSharding(self.mesh, P(AXIS)))
         return state
 
+    def place(self, state):
+        """Re-place a full logical fleet state onto *this* engine's mesh.
+
+        Every :class:`BatchState` leaf carries the slot axis leading, so one
+        sharding re-slices the whole pytree.  This is the elastic half of the
+        checkpoint contract (DESIGN.md §6) exposed directly: a state captured
+        on any mesh (host arrays included) becomes valid input for this
+        engine's fused dispatch — the scheduler's device-loss shrink/regrow
+        rebuilds the engine on the surviving sub-mesh and pushes the
+        evacuated state through here.
+        """
+        if self.mesh is None:
+            return jax.tree.map(jnp.asarray, state)
+        sharding = NamedSharding(self.mesh, P(AXIS))
+        return jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), sharding), state)
+
     # --- jitted slot operations ----------------------------------------------
 
     def _localize(self, slot):

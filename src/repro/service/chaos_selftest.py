@@ -18,7 +18,15 @@ contract:
   result set whose union with the pre-crash yields is exactly the fault-free
   run's, bit-for-bit (duplicates from replayed post-snapshot work included);
 - **deadlines**: an expired SLO evicts with a best-effort partial result
-  instead of hanging the slot.
+  instead of hanging the slot;
+- **device loss** (meshes of >= 2): a device killed mid-run is evacuated and
+  the fleet completes on the shrunken mesh — unaffected requests bit-identical
+  to the fault-free run, affected requests terminating with snapshot-recovery
+  or re-admission provenance, the shrunken ring satisfying the
+  ``make_schedule``/``ring_perms`` invariants; transient faults retry to a
+  *fully* bit-identical run; a healed device regrows the mesh;
+- **elastic restore**: a snapshot saved on the widest mesh restores onto
+  every smaller device count with all slots bit-identical (DESIGN.md §6).
 
 Human progress goes through ``logging`` (``-q``/``-v``); the machine-readable
 ``RESULT_JSON:`` line on stdout stays byte-identical for CI consumers.
@@ -87,9 +95,11 @@ def main() -> None:
 
     from repro.core import QuadratureConfig
     from repro.core.integrands import get_param
+    from repro.core.redistribution import check_ring_invariants
     from repro.service import BatchScheduler, QuadRequest
     from repro.service.checkpoint import ServiceCheckpointer
     from repro.service.faults import (
+        DeviceDown,
         SimulatedCrash,
         corrupt_slot_hook,
         crash_at,
@@ -306,6 +316,153 @@ def main() -> None:
         log.debug("  deadline: partial after %d evals", dl.n_evals)
         scen["deadline"] = {"partial_evals": dl.n_evals, "healthy_parity": True}
 
+        # --- device loss (elastic fleet) ------------------------------------
+        # The watchdog/evacuation contract only exists on multi-device
+        # meshes: a single-device engine has nowhere to evacuate to.
+        if c >= 2:
+            # permanent loss, no snapshot coverage: the failed device's
+            # requests are re-admitted from scratch with provenance; every
+            # request (affected included — trajectories are placement-pure)
+            # lands value-bit-identical to the fault-free run
+            dd = DeviceDown(device=1, at_tick=2)
+            sched = BatchScheduler(
+                cfg,
+                family,
+                devices=devices,
+                fault_injector=dd,
+                max_dispatch_retries=1,
+                retry_backoff_s=0.0,
+            )
+            results = list(sched.serve(list(base_reqs)))
+            assert len(results) == len(base_reqs), _full(results)
+            vals = _values(results)
+            for rid in healthy_ids:
+                assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+            affected = [r for r in results if r.evacuated]
+            assert affected, _full(results)
+            for r in affected:
+                assert r.evacuated == "readmit", r
+                assert r.attempts == 2 and r.retried_from == "device_lost", r
+            st = sched.last_stats
+            assert st["dispatch_retries"] == 1, st
+            assert st["mesh_shrinks"] == 1, st
+            assert st["evacuations"] == len(affected), (st, len(affected))
+            assert sched.engine.n_devices < c, sched.engine.n_devices
+            check_ring_invariants(sched.engine.n_devices)
+            log.debug(
+                "  device_kill_readmit: %d evacuated, mesh %d -> %d",
+                len(affected),
+                c,
+                sched.engine.n_devices,
+            )
+            scen["device_kill_readmit"] = {
+                "evacuated": len(affected),
+                "shrunk_to": sched.engine.n_devices,
+                "healthy_parity": True,
+            }
+
+            # permanent loss with snapshot coverage: slots present in the
+            # newest snapshot rewind and replay (no extra attempt consumed);
+            # slots the snapshot missed fall back to re-admission
+            with tempfile.TemporaryDirectory() as tmp:
+                ckpt = ServiceCheckpointer(tmp)
+                dd = DeviceDown(device=1, at_tick=3)
+                sched = BatchScheduler(
+                    cfg,
+                    family,
+                    devices=devices,
+                    checkpointer=ckpt,
+                    checkpoint_every=1,
+                    fault_injector=dd,
+                    max_dispatch_retries=1,
+                    retry_backoff_s=0.0,
+                )
+                results = list(sched.serve(list(base_reqs)))
+            assert len(results) == len(base_reqs), _full(results)
+            vals = _values(results)
+            for rid in healthy_ids:
+                assert vals[rid] == base_vals[rid], (rid, vals[rid], base_vals[rid])
+            affected = [r for r in results if r.evacuated]
+            assert any(r.evacuated == "snapshot" for r in affected), _full(results)
+            for r in affected:
+                assert r.evacuated in ("snapshot", "readmit"), r
+                if r.evacuated == "snapshot":
+                    assert r.attempts == 1 and r.retried_from is None, r
+                else:
+                    assert r.attempts == 2 and r.retried_from == "device_lost", r
+            st = sched.last_stats
+            assert st["mesh_shrinks"] == 1, st
+            assert st["evacuations"] == len(affected), (st, len(affected))
+            log.debug(
+                "  device_kill_snapshot: %d recovered / %d evacuated",
+                sum(1 for r in affected if r.evacuated == "snapshot"),
+                len(affected),
+            )
+            scen["device_kill_snapshot"] = {
+                "evacuated": len(affected),
+                "snapshot_recovered": sum(
+                    1 for r in affected if r.evacuated == "snapshot"
+                ),
+                "healthy_parity": True,
+            }
+
+            # transient fault: the watchdog's retry budget covers it, so the
+            # run is FULLY bit-identical (scheduling included) — the fault
+            # never becomes visible in any result
+            dd = DeviceDown(device=1, at_tick=2, transient_failures=2)
+            sched = BatchScheduler(
+                cfg,
+                family,
+                devices=devices,
+                fault_injector=dd,
+                max_dispatch_retries=3,
+                retry_backoff_s=0.0,
+            )
+            results = list(sched.serve(list(base_reqs)))
+            assert _full(results) == baseline_by_count[c], _full(results)[:2]
+            st = sched.last_stats
+            assert st["dispatch_retries"] == 2, st
+            assert st["mesh_shrinks"] == 0 and st["evacuations"] == 0, st
+            assert sched.engine.n_devices == c, sched.engine.n_devices
+            log.debug("  device_transient: full parity after 2 retries")
+            scen["device_transient"] = {"retries": 2, "full_parity": True}
+
+            # loss followed by heal: the mesh shrinks, serves, and regrows
+            # back to the original device count at a later admission tick
+            storm_n2 = 24
+            ref = list(
+                BatchScheduler(cfg, family, devices=devices).serve(
+                    storm_requests(family, d, storm_n2, seed=7)
+                )
+            )
+            dd = DeviceDown(device=1, at_tick=2, restore_at_tick=6)
+            sched = BatchScheduler(
+                cfg,
+                family,
+                devices=devices,
+                fault_injector=dd,
+                max_dispatch_retries=1,
+                retry_backoff_s=0.0,
+            )
+            results = list(sched.serve(storm_requests(family, d, storm_n2, seed=7)))
+            assert len(results) == storm_n2, len(results)
+            assert _values(results) == _values(ref), _full(results)[:2]
+            st = sched.last_stats
+            assert st["mesh_shrinks"] == 1, st
+            assert st["mesh_regrows"] >= 1, st
+            assert sched.engine.n_devices == c, sched.engine.n_devices
+            check_ring_invariants(sched.engine.n_devices)
+            log.debug(
+                "  device_regrow: shrink + %d regrows back to %d devices",
+                st["mesh_regrows"],
+                sched.engine.n_devices,
+            )
+            scen["device_regrow"] = {
+                "regrows": st["mesh_regrows"],
+                "final_devices": sched.engine.n_devices,
+                "healthy_parity": True,
+            }
+
         out["scenarios"][f"devices_{c}"] = scen
 
     # the fault-free reference itself must hold the cross-device-count
@@ -313,6 +470,62 @@ def main() -> None:
     ref = baseline_by_count[counts[0]]
     for c in counts[1:]:
         assert baseline_by_count[c] == ref, (c, baseline_by_count[c][:2], ref[:2])
+
+    # --- elastic restore across mesh sizes (DESIGN.md §6) -------------------
+    # One crash on the widest mesh, then resume the same snapshot set onto
+    # every *smaller* device count: the manager loads full logical arrays and
+    # re-shards, so each resumed fleet must replay to the identical result
+    # set — the direct test of the restore-across-mesh-sizes claim.
+    c_hi = counts[-1]
+    if c_hi > 1:
+        restored_to = {}
+        with tempfile.TemporaryDirectory() as tmp:
+            ckpt = ServiceCheckpointer(tmp)
+            crashing = BatchScheduler(
+                cfg,
+                family,
+                devices=jax.devices()[:c_hi],
+                checkpointer=ckpt,
+                checkpoint_every=2,
+                on_tick=crash_at(3),
+            )
+            pre = []
+            try:
+                for r in crashing.serve(list(base_reqs)):
+                    pre.append(r)
+            except SimulatedCrash:
+                pass
+            else:
+                raise AssertionError("crash injector never fired")
+            for c_lo in [c for c in counts if c < c_hi]:
+                # restore-only (checkpoint_every=0): the snapshot set stays
+                # pristine, so every c_lo resumes from the same crash point
+                resumed = BatchScheduler(
+                    cfg, family, devices=jax.devices()[:c_lo], checkpointer=ckpt
+                )
+                post = list(resumed.serve(list(base_reqs), resume=True))
+                by_id = {}
+                for r in pre + post:
+                    t = _full([r])[0]
+                    assert by_id.setdefault(r.req_id, t) == t, (
+                        c_lo,
+                        by_id[r.req_id],
+                        t,
+                    )
+                union = [by_id[k] for k in sorted(by_id)]
+                assert union == baseline_by_count[c_hi], (c_lo, union[:2])
+                restored_to[str(c_lo)] = len(post)
+                log.debug(
+                    "  elastic_restore: %d -> %d devices, %d post-resume results",
+                    c_hi,
+                    c_lo,
+                    len(post),
+                )
+        out["elastic_restore"] = {
+            "from_devices": c_hi,
+            "restored_to": restored_to,
+            "union_parity": True,
+        }
 
     print("RESULT_JSON:" + json.dumps(out))
 

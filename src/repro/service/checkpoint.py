@@ -39,6 +39,11 @@ from repro.checkpoint.manager import CheckpointManager
 
 _META_RE = re.compile(r"^meta_(\d{8})\.json$")
 
+#: Keys the scheduler's resume path reads from a meta sidecar.  A sidecar
+#: missing any of them is treated as corrupt (same fallback as a JSON parse
+#: failure): a partial write that happens to be valid JSON must not restore.
+_REQUIRED_META = ("it", "ticks", "stats", "pulled_ids", "slots")
+
 
 class ServiceCheckpointer:
     """Snapshot/restore the full serving state of a :class:`BatchScheduler`.
@@ -91,6 +96,17 @@ class ServiceCheckpointer:
         steps = self.complete_steps()
         return steps[-1] if steps else None
 
+    def _read_meta(self, step: int) -> dict:
+        """Load + validate one meta sidecar (raises on corrupt/partial)."""
+        with open(os.path.join(self.dir, f"meta_{step:08d}.json")) as f:
+            meta = json.load(f)
+        missing = [k for k in _REQUIRED_META if k not in meta]
+        if missing:
+            raise KeyError(
+                f"meta sidecar for step {step} is missing keys {missing}"
+            )
+        return meta
+
     def restore(self, engine, step: Optional[int] = None):
         """Rebuild ``(state, meta)`` for ``engine`` from the newest snapshot.
 
@@ -98,13 +114,47 @@ class ServiceCheckpointer:
         placement: leaves are re-placed with the live state's shardings, so a
         restore works across device counts (the manager loads full logical
         arrays and re-shards).
+
+        A snapshot whose artifacts turn out to be unreadable — a truncated
+        meta sidecar surviving the ``os.replace`` on a dirty filesystem, a
+        CRC-failing state leaf — is skipped and the newest *previous*
+        complete snapshot restores instead; only when every snapshot is
+        unreadable (or an explicit ``step`` was requested) does the error
+        propagate.
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no complete service snapshot in {self.dir}")
         like = engine.init()
         shardings = jax.tree.map(lambda x: x.sharding, like)
-        state, _ = self.manager.restore(like, step=step, shardings=shardings)
-        with open(os.path.join(self.dir, f"meta_{step:08d}.json")) as f:
-            meta = json.load(f)
+        state, meta, _ = self._restore_any(like, shardings, step)
         return state, meta
+
+    def restore_host(self, like, step: Optional[int] = None):
+        """``(state, meta, step)`` from the newest readable snapshot, without
+        re-placing the state on any mesh.
+
+        ``like`` only supplies the expected pytree structure/shapes (the live
+        host copy of the engine state works).  Used by the scheduler's
+        device-loss evacuation, which patches individual slot rows on the
+        host before re-placing the whole state on the surviving sub-mesh.
+        """
+        return self._restore_any(like, None, step)
+
+    def _restore_any(self, like, shardings, step: Optional[int]):
+        if step is not None:
+            meta = self._read_meta(step)
+            state, _ = self.manager.restore(like, step=step, shardings=shardings)
+            return state, meta, step
+        steps = self.complete_steps()
+        if not steps:
+            raise FileNotFoundError(f"no complete service snapshot in {self.dir}")
+        errors = []
+        for s in reversed(steps):
+            try:
+                meta = self._read_meta(s)
+                state, _ = self.manager.restore(like, step=s, shardings=shardings)
+                return state, meta, s
+            except (json.JSONDecodeError, KeyError, OSError) as err:
+                errors.append(f"step {s}: {type(err).__name__}: {err}")
+        raise FileNotFoundError(
+            f"no readable service snapshot in {self.dir} "
+            f"({len(steps)} present, all corrupt): " + "; ".join(errors)
+        )

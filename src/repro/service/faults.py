@@ -22,19 +22,43 @@ Injector families (used by :mod:`repro.service.chaos_selftest`):
 - **queue storms** — :func:`storm_requests` builds a deterministic burst of
   requests far exceeding the fleet's slot count, exercising admission
   backpressure.
+- **device loss** — :class:`DeviceDown` makes one device of the mesh fail at
+  a chosen iteration (raising :class:`~repro.service.scheduler.DeviceLostError`
+  or hanging the dispatch), transiently or permanently, optionally healing
+  later — exercising the scheduler's watchdog retry, slot evacuation, mesh
+  shrink and regrow.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+import time
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.integrands import ParamIntegrand
-from repro.service.scheduler import QuadRequest
+
+# The loss/timeout exceptions live with the scheduler's watchdog (this module
+# imports the scheduler, so the reverse import would be circular); re-exported
+# here because chaos tests naturally look for them next to the injectors.
+from repro.service.scheduler import DeviceLostError, DispatchTimeout, QuadRequest
+
+__all__ = [
+    "NAN_SENTINEL",
+    "SimulatedCrash",
+    "DeviceLostError",
+    "DispatchTimeout",
+    "DeviceDown",
+    "nan_family",
+    "poison_theta",
+    "corrupt_slot",
+    "corrupt_slot_hook",
+    "crash_at",
+    "storm_requests",
+]
 
 #: Theta magnitude that triggers the NaN wrapper.  Large enough that no
 #: sampled problem instance ever reaches it, small enough to stay finite in
@@ -131,6 +155,73 @@ def corrupt_slot_hook(slot: int, at_iteration: int, req_id: Optional[int] = None
         return corrupt_slot(state, slot)
 
     return hook
+
+
+@dataclasses.dataclass
+class DeviceDown:
+    """Deterministic device-loss injector for the scheduler's watchdog.
+
+    Plugs into ``BatchScheduler(fault_injector=...)``: the scheduler calls
+    :meth:`pre_dispatch` at every dispatch boundary (before the engine
+    consumes the state, so retry/evacuation read intact buffers) and probes
+    :meth:`healthy` to attribute hangs and to decide regrowth.
+
+    ``device`` is an index into the engine's *original* mesh.  From
+    iteration ``at_tick`` the device is down:
+
+    - ``transient_failures=0`` (default): permanently — until
+      ``restore_at_tick``, if set, after which :meth:`healthy` reports the
+      device back and a later admission tick regrows the mesh onto it;
+    - ``transient_failures=k``: for exactly ``k`` dispatch attempts, then
+      healthy again — a watchdog with ``max_dispatch_retries >= k`` rides
+      it out with the run bit-identical to a fault-free one.
+
+    ``mode="raise"`` raises :class:`DeviceLostError` (a detectable fault);
+    ``mode="hang"`` sleeps ``hang_s`` instead (a wedged dispatch — pair it
+    with ``dispatch_timeout_s`` so the watchdog converts the hang into a
+    :class:`DispatchTimeout`).
+
+    Failure behaviour is a pure function of the dispatch sequence — no wall
+    clock, no randomness — so a chaos run replays decision-for-decision.
+    """
+
+    device: int
+    at_tick: int
+    transient_failures: int = 0  # 0 = permanent
+    restore_at_tick: Optional[int] = None  # heal point (permanent mode)
+    mode: str = "raise"  # "raise" | "hang"
+    hang_s: float = 30.0
+    _fired: int = dataclasses.field(default=0, init=False, repr=False)
+
+    def __post_init__(self):
+        if self.mode not in ("raise", "hang"):
+            raise ValueError(f"mode must be 'raise' or 'hang', got {self.mode!r}")
+
+    def _down(self, it: int) -> bool:
+        if it < self.at_tick:
+            return False
+        if self.transient_failures > 0:
+            return self._fired < self.transient_failures
+        if self.restore_at_tick is not None and it >= self.restore_at_tick:
+            return False
+        return True
+
+    def healthy(self, device: int, it: int) -> bool:
+        """Scheduler probe: is ``device`` serving at iteration ``it``?"""
+        return device != self.device or not self._down(it)
+
+    def pre_dispatch(self, it: int, device_indices: Sequence[int]) -> None:
+        """Fail the dispatch when the down device is part of the mesh."""
+        if self.device not in device_indices or not self._down(it):
+            return
+        self._fired += 1
+        if self.mode == "hang":
+            time.sleep(self.hang_s)
+            return
+        raise DeviceLostError(
+            self.device,
+            f"injected device loss: device {self.device} at iteration {it}",
+        )
 
 
 def crash_at(at_iteration: int):

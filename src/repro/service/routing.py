@@ -74,6 +74,13 @@ class GracefulScheduler:
     from the aggregate — plus ``reroutes`` (fallback re-admissions, both
     kinds).  ``recorder`` is shared with every pool; re-admissions emit
     ``service.reroute`` flow events (drawn as arrows in the Chrome trace).
+
+    Elastic-fleet kwargs (``fault_injector``, ``max_dispatch_retries``,
+    ``dispatch_timeout_s``) pass through ``scheduler_kwargs`` to the
+    *primary* pool only: the fallback VEGAS pool is single-device by
+    construction, so device-loss recovery does not apply to it, and a
+    retry pass after a shrink simply runs on the primary's surviving
+    sub-mesh.  ``evacuated`` provenance survives re-routing.
     """
 
     def __init__(
@@ -176,10 +183,13 @@ class GracefulScheduler:
             prior = {r.req_id: r for r in reroute}
             pool = self._vegas()
             for res in pool.serve([by_id[r.req_id] for r in reroute]):
+                # a request evacuated off a failed device in the prior
+                # attempt keeps that provenance through the re-route
                 yield dataclasses.replace(
                     res,
                     attempts=prior[res.req_id].attempts + 1,
                     retried_from=prior[res.req_id].status,
+                    evacuated=res.evacuated or prior[res.req_id].evacuated,
                 )
             merge(pool.last_stats)
 
@@ -210,5 +220,6 @@ class GracefulScheduler:
                     res,
                     attempts=prior[res.req_id].attempts + 1,
                     retried_from=prior[res.req_id].status,
+                    evacuated=res.evacuated or prior[res.req_id].evacuated,
                 )
             merge(self.primary.last_stats)

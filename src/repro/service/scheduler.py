@@ -47,12 +47,23 @@ Graceful degradation on top of this taxonomy (fallback re-routing of
 ``capacity``/``nonfinite`` evictions to the VEGAS pool, looser-tolerance
 retries) lives in :mod:`repro.service.routing`; service-level
 checkpoint/resume in :mod:`repro.service.checkpoint`.
+
+The scheduler is also elastic in the fleet-topology dimension: every
+dispatch runs under a host-side watchdog (:class:`DispatchTimeout` /
+:class:`DeviceLostError`, bounded retries with exponential backoff), and a
+device declared permanently failed is evacuated — snapshot-covered slots
+rewind to the newest service checkpoint, uncovered requests re-enter the
+admission queue with provenance — before the engine is rebuilt on the
+largest surviving sub-mesh and, once the device heals, regrown.  See
+DESIGN.md §6 for the failure model and the bit-identity guarantees.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import deque
 from typing import Any, Callable, Iterable, Iterator, Optional, Union
 
 import jax
@@ -62,6 +73,65 @@ from repro.core.config import QuadratureConfig
 from repro.core.integrands import ParamIntegrand
 from repro.service.batch_engine import BatchEngine, BatchState
 from repro.telemetry import NULL, ServiceStats
+
+
+class DeviceLostError(RuntimeError):
+    """A device failed permanently (retries exhausted, or mesh not elastic).
+
+    ``device`` is the failing device's global index in the engine's
+    *original* mesh, or ``None`` when the watchdog could not attribute the
+    fault to a specific device.  Raised by injectors
+    (:class:`repro.service.faults.DeviceDown`) to simulate the loss, and
+    re-raised by the scheduler only when recovery is impossible — a
+    single-device engine has nowhere to evacuate to.
+    """
+
+    def __init__(self, device: Optional[int], message: str):
+        super().__init__(message)
+        self.device = device
+
+
+class DispatchTimeout(RuntimeError):
+    """A fused dispatch exceeded the watchdog's ``dispatch_timeout_s``.
+
+    Unlike :class:`DeviceLostError` it carries no device attribution — a
+    hang looks the same from the host regardless of which device wedged —
+    so the scheduler falls back to the injector's ``healthy`` probe (or
+    gives up) to pick the device to declare failed.
+    """
+
+
+def _call_with_timeout(fn: Callable, timeout_s: Optional[float]):
+    """Run ``fn()`` under a wall-clock watchdog.
+
+    With a timeout the call runs on a daemon thread and a ``join`` bounds
+    the wait: a wedged dispatch raises :class:`DispatchTimeout` on the host
+    and the stuck thread is abandoned.  Exceptions from ``fn`` itself
+    propagate unchanged either way.  Retrying after a timeout presumes the
+    abandoned attempt never consumed the state buffers — true of the
+    deterministic injectors, which stall in the pre-dispatch hook before
+    the engine touches the state.
+    """
+    if timeout_s is None:
+        return fn()
+    box: dict = {}
+
+    def target():
+        try:
+            box["value"] = fn()
+        except BaseException as err:  # noqa: BLE001 - re-raised on the host
+            box["error"] = err
+
+    worker = threading.Thread(target=target, daemon=True, name="dispatch-watchdog")
+    worker.start()
+    worker.join(timeout_s)
+    if worker.is_alive():
+        raise DispatchTimeout(
+            f"fused dispatch still running after {timeout_s}s watchdog"
+        )
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
 
 
 def make_engine(
@@ -117,7 +187,13 @@ class QuadResult:
     which engine pool produced this estimate, how many admissions the
     request consumed in total, and — for re-routed/retried requests — the
     terminal status of the attempt that triggered the re-route (see
-    :class:`repro.service.routing.GracefulScheduler`).
+    :class:`repro.service.routing.GracefulScheduler`).  ``evacuated``
+    records device-loss provenance: ``"snapshot"`` when the request's slot
+    was recovered from the newest service checkpoint after its device
+    failed (its trajectory rewound and replayed, still bit-identical),
+    ``"readmit"`` when no snapshot covered the slot and the request was
+    re-admitted from scratch (``attempts`` bumps and ``retried_from`` is
+    ``"device_lost"``), ``None`` for requests no device failure touched.
     """
 
     req_id: int
@@ -131,13 +207,15 @@ class QuadResult:
     backend: str = "cubature"  # engine pool that produced this estimate
     attempts: int = 1  # admissions consumed (1 = first attempt)
     retried_from: Optional[str] = None  # prior attempt's terminal status
+    evacuated: Optional[str] = None  # device-loss recovery: snapshot | readmit
 
     def summary(self) -> str:
         via = f" via={self.backend}" if self.attempts > 1 else ""
+        evac = f" evac={self.evacuated}" if self.evacuated else ""
         return (
             f"req={self.req_id} I={self.integral:.15e} eps={self.error:.3e} "
             f"[{self.status}] iters={self.iterations} evals={self.n_evals:.3g}"
-            f"{via}"
+            f"{via}{evac}"
         )
 
 
@@ -190,8 +268,9 @@ class BatchScheduler:
     iterations), ``dispatches`` (fused engine launches), ``admissions``,
     ``collections``, ``migrations`` (problems moved between devices by the
     cyclic rebalancer), ``quarantines`` (slots collected with a
-    ``nonfinite`` status), ``deadlines`` (slots evicted on an expired SLO)
-    and ``checkpoints``.
+    ``nonfinite`` status), ``deadlines`` (slots evicted on an expired SLO),
+    ``checkpoints``, and the elastic-fleet counters ``dispatch_retries``,
+    ``evacuations``, ``mesh_shrinks`` and ``mesh_regrows``.
 
     ``recorder`` (a :class:`repro.telemetry.Recorder`; default the no-op
     :data:`~repro.telemetry.NULL`) receives the structured event stream:
@@ -208,6 +287,21 @@ class BatchScheduler:
     crash did not touch.  ``on_tick(it, state, slot_req)`` is a host hook
     called at every dispatch boundary (fault injection, external monitoring);
     it may return a replacement state pytree or ``None``.
+
+    **Elastic fleet resilience** (DESIGN.md §6): every dispatch runs under a
+    host-side watchdog.  A :class:`DeviceLostError` from ``fault_injector``'s
+    pre-dispatch hook (see :class:`repro.service.faults.DeviceDown`) or a
+    :class:`DispatchTimeout` past ``dispatch_timeout_s`` is retried up to
+    ``max_dispatch_retries`` times with exponential backoff
+    (``retry_backoff_s * 2**attempt``) — transient faults recover with the
+    run bit-identical to a fault-free one.  When retries exhaust, the device
+    is declared failed: its slots are evacuated (recovered from the newest
+    service snapshot when it covers them, else their requests re-admitted
+    with ``attempts``/``retried_from``/``evacuated`` provenance), the engine
+    is rebuilt on the largest surviving sub-mesh dividing ``batch_slots``,
+    and the fleet keeps serving.  A later admission tick regrows the mesh
+    when the injector reports the device healthy again.  All detection and
+    recovery happens between dispatches — no traced code changes.
     """
 
     def __init__(
@@ -221,6 +315,10 @@ class BatchScheduler:
         checkpoint_every: int = 0,
         on_tick: Optional[Callable] = None,
         recorder=NULL,
+        fault_injector=None,
+        max_dispatch_retries: int = 2,
+        dispatch_timeout_s: Optional[float] = None,
+        retry_backoff_s: float = 0.1,
     ):
         self.recorder = recorder
         if engine is not None:
@@ -241,16 +339,87 @@ class BatchScheduler:
             raise ValueError(f"checkpoint_every must be >= 0, got {checkpoint_every}")
         if checkpoint_every and checkpointer is None:
             raise ValueError("checkpoint_every > 0 requires a checkpointer")
+        if max_dispatch_retries < 0:
+            raise ValueError(
+                f"max_dispatch_retries must be >= 0, got {max_dispatch_retries}"
+            )
+        if dispatch_timeout_s is not None and dispatch_timeout_s <= 0:
+            raise ValueError(
+                f"dispatch_timeout_s must be positive, got {dispatch_timeout_s}"
+            )
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.on_tick = on_tick
+        self.fault_injector = fault_injector
+        self.max_dispatch_retries = max_dispatch_retries
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self.retry_backoff_s = retry_backoff_s
         self._stats = ServiceStats()
         self._warm = False  # first-ever dispatch traces + compiles the step
+        # Elastic-mesh bookkeeping.  Devices are identified by their index in
+        # the engine's ORIGINAL mesh for the whole scheduler lifetime —
+        # injector device ids, telemetry attrs, and the regrow target all
+        # speak this namespace.  A single-device engine is not elastic
+        # (nowhere to evacuate to): _all_devices stays None and a permanent
+        # device loss is fatal.
+        mesh = getattr(self.engine, "mesh", None)
+        self._all_devices = list(mesh.devices.flat) if mesh is not None else None
+        self._current_devs = list(range(self.engine.n_devices))
+        self._failed: set = set()
 
     @property
     def last_stats(self) -> dict:
         """Dict view of the latest run's :class:`ServiceStats` (compat)."""
         return self._stats.as_dict()
+
+    # --- elastic-mesh plumbing -----------------------------------------------
+
+    def _healthy_mesh(self) -> list:
+        """Largest sub-mesh of healthy devices whose size divides the slot
+        count, as original-mesh indices in original order.
+
+        ``batch_slots % n_devices == 0`` is the engine's contiguous-block
+        placement invariant, so losing one device out of e.g. 4 with 8 slots
+        shrinks to 2 devices, idling one healthy device until a regrow.
+        """
+        healthy = [
+            gi for gi in range(len(self._all_devices)) if gi not in self._failed
+        ]
+        if not healthy:
+            raise DeviceLostError(None, "every device in the mesh has failed")
+        B = self.engine.n_slots
+        m = max(k for k in range(1, len(healthy) + 1) if B % k == 0)
+        return healthy[:m]
+
+    def _rebuild_engine(self, dev_indices: list):
+        """Rebuild the engine on the given original-mesh device indices.
+
+        The compiled step/admit/release are rebuilt for the new device count
+        (``redistribution.make_schedule``/``ring_perms`` are re-derived from
+        it inside the engine), so the next dispatch re-traces — the warm
+        flag resets and the trace shows a fresh ``service.compile`` span.
+        """
+        devices = [self._all_devices[i] for i in dev_indices]
+        self.engine = make_engine(
+            self.cfg, self.engine.family, devices=devices, recorder=self.recorder
+        )
+        self._current_devs = list(dev_indices)
+        self._warm = False
+        return self.engine
+
+    def _attribute_fault(self, err: Exception, it: int) -> Optional[int]:
+        """Best-effort mapping of a dispatch fault to an original-mesh device
+        index: the error's own attribution first, else the injector's
+        ``healthy`` probe over the devices in the current mesh."""
+        dev = getattr(err, "device", None)
+        if dev is not None:
+            return int(dev)
+        probe = getattr(self.fault_injector, "healthy", None)
+        if probe is not None:
+            for gi in self._current_devs:
+                if not probe(gi, it):
+                    return gi
+        return None
 
     def serve(
         self, requests: Iterable[QuadRequest], resume: bool = False
@@ -271,7 +440,6 @@ class BatchScheduler:
         engine = self.engine
         cfg = self.cfg
         B = engine.n_slots
-        per_dev = engine.slots_per_device
         pending = iter(requests)
         exhausted = False  # the iterator signalled StopIteration
         slot_req: list[Optional[QuadRequest]] = [None] * B
@@ -279,6 +447,14 @@ class BatchScheduler:
         slot_wall = [0.0] * B  # admission wall clock, for deadline_s
         pulled_ids: set[int] = set()
         skip_ids: set[int] = set()
+        # Device-loss bookkeeping: requests bumped off a failed device wait
+        # in retry_queue (served before the pending iterator, preserving
+        # admission-order determinism), and the evac_* maps carry their
+        # provenance into the eventual QuadResult.
+        retry_queue: deque = deque()
+        evac_attempts: dict = {}  # req_id -> extra admissions consumed
+        evac_from: dict = {}  # req_id -> status that triggered the retry
+        evac_kind: dict = {}  # req_id -> "snapshot" | "readmit"
         rec = self.recorder
         stats = ServiceStats()
         self._stats = stats
@@ -324,8 +500,11 @@ class BatchScheduler:
             # loop's pull points, and an unbounded stream backpressures on
             # slot availability.  On resume, requests the crashed run had
             # already pulled are skipped so the replayed stream lines up
-            # with the restored slot map.
+            # with the restored slot map.  Evacuated requests (device loss)
+            # re-enter here, ahead of the never-admitted stream.
             nonlocal exhausted
+            if retry_queue:
+                return retry_queue.popleft()
             if exhausted:
                 return None
             req = next(pending, None)
@@ -343,6 +522,7 @@ class BatchScheduler:
             free = [s for s in range(B) if slot_req[s] is None]
             if engine.n_devices == 1:
                 return free
+            per_dev = engine.slots_per_device
             load = [0] * engine.n_devices
             for s in range(B):
                 if slot_req[s] is not None:
@@ -377,7 +557,7 @@ class BatchScheduler:
                     bump("admissions")
                     rec.event(
                         "service.admission",
-                        lane=slot // per_dev,
+                        lane=slot // engine.slots_per_device,
                         req_id=req.req_id,
                         slot=slot,
                         it=it,
@@ -391,8 +571,31 @@ class BatchScheduler:
             The snapshot is taken *after* the admissions so a resumed run
             continues from a tick boundary: the next host decision after
             restore is the next dispatch, exactly as in the original run.
+            Mesh regrowth also hangs off the tick: a failed device that the
+            injector reports healthy again rejoins here, before the
+            admissions, so fresh admissions spread across the regrown mesh.
             """
-            nonlocal ticks
+            nonlocal engine, ticks
+            probe = getattr(self.fault_injector, "healthy", None)
+            if self._failed and probe is not None:
+                restored = [gi for gi in sorted(self._failed) if probe(gi, it)]
+                if restored:
+                    self._failed.difference_update(restored)
+                    target = self._healthy_mesh()
+                    if len(target) > engine.n_devices:
+                        with rec.span(
+                            "service.mesh_regrow", it=it, devices=len(target)
+                        ):
+                            host = jax.tree.map(np.asarray, jax.device_get(state))
+                            engine = self._rebuild_engine(target)
+                            state = engine.place(host)
+                        bump("mesh_regrows")
+                        rec.event(
+                            "service.mesh_regrow",
+                            it=it,
+                            devices=len(target),
+                            restored=restored,
+                        )
             state = admit_free_slots(state)
             ticks += 1
             if (
@@ -440,8 +643,8 @@ class BatchScheduler:
                 if rec.enabled:
                     rec.flow(
                         "service.migrate",
-                        src // per_dev,
-                        dst // per_dev,
+                        src // engine.slots_per_device,
+                        dst // engine.slots_per_device,
                         req_id=snapshot_req[src].req_id,
                         src_slot=src,
                         dst_slot=dst,
@@ -449,11 +652,119 @@ class BatchScheduler:
                     )
             bump("migrations", len(valid))
 
+        def evacuate_and_shrink(state: BatchState, dev: int) -> BatchState:
+            """Recover the failed device's slots and rebuild on the survivors.
+
+            Evacuation ordering (DESIGN.md §6): snapshot-covered slots are
+            rewound to the newest readable service snapshot (their replay is
+            deterministic, so final values stay bit-identical); uncovered
+            slots lose their progress and their requests re-enter the queue
+            with ``attempts``/``retried_from``/``evacuated`` provenance.
+            Surviving devices' slots are carried over untouched — their
+            trajectories are placement-independent, so shrink cannot change
+            their bits.
+            """
+            nonlocal engine
+            if self._all_devices is None or engine.n_devices <= 1:
+                raise DeviceLostError(
+                    dev,
+                    f"device {dev} lost permanently with no surviving "
+                    "sub-mesh to evacuate to",
+                )
+            per_dev = engine.slots_per_device
+            local = self._current_devs.index(dev)
+            self._failed.add(dev)
+            rec.event("service.device_lost", device=dev, it=it)
+            target = self._healthy_mesh()
+            new_per = B // len(target)
+            with rec.span("service.evacuate", it=it, device=dev) as sp:
+                # Host copy of the fleet state.  The fault fired at the
+                # dispatch boundary (pre-dispatch hook / abandoned launch),
+                # so the buffers were never donated into a completed
+                # dispatch and remain readable.  A real device loss would
+                # lose the failed shard's rows — exactly the rows rewritten
+                # or released below; surviving rows are all that is trusted.
+                host = jax.tree.map(np.array, jax.device_get(state))
+                snap_state = snap_meta = None
+                if self.checkpointer is not None:
+                    try:
+                        snap_state, snap_meta, _ = self.checkpointer.restore_host(
+                            host
+                        )
+                    except FileNotFoundError:
+                        pass
+                snap_slots = {}
+                if snap_meta is not None:
+                    snap_state = jax.tree.map(np.asarray, snap_state)
+                    snap_slots = {
+                        int(e["slot"]): int(e["req"]["req_id"])
+                        for e in snap_meta["slots"]
+                    }
+                recovered = readmitted = 0
+                for s in range(local * per_dev, (local + 1) * per_dev):
+                    req = slot_req[s]
+                    if req is None:
+                        continue
+                    if snap_state is not None and snap_slots.get(s) == req.req_id:
+                        # rewind the slot to the snapshot row-for-row
+                        # (occupied/done flags included); the deterministic
+                        # replay re-derives the lost refinement
+                        jax.tree.map(lambda h, v: h.__setitem__(s, v[s]), host, snap_state)
+                        evac_kind[req.req_id] = "snapshot"
+                        slot_wall[s] = time.monotonic()  # wall SLO restarts
+                        kind = "snapshot"
+                        recovered += 1
+                    else:
+                        host.occupied[s] = False
+                        host.done[s] = False
+                        retry_queue.append(req)
+                        evac_attempts[req.req_id] = evac_attempts.get(req.req_id, 0) + 1
+                        evac_from[req.req_id] = "device_lost"
+                        evac_kind[req.req_id] = "readmit"
+                        slot_req[s] = None
+                        kind = "readmit"
+                        readmitted += 1
+                    bump("evacuations")
+                    if rec.enabled:
+                        # lanes are original-mesh device indices: src is the
+                        # failed device, dst the slot row's new owner
+                        # "via", not "kind": attrs merge into the event
+                        # envelope, whose own "kind" key is the event type
+                        rec.flow(
+                            "service.evacuate",
+                            dev,
+                            target[s // new_per],
+                            req_id=req.req_id,
+                            slot=s,
+                            it=it,
+                            via=kind,
+                        )
+                sp["recovered"] = recovered
+                sp["readmitted"] = readmitted
+            with rec.span(
+                "service.mesh_shrink", it=it, devices=len(target), failed=dev
+            ):
+                engine = self._rebuild_engine(target)
+                state = engine.place(host)
+            bump("mesh_shrinks")
+            rec.event(
+                "service.mesh_shrink",
+                it=it,
+                devices=len(target),
+                failed=sorted(self._failed),
+            )
+            return state
+
         if not resume:
             # on resume the snapshot was taken at a tick boundary, right
             # after its admissions: the next host decision is the dispatch
             state = admission_tick(state)
-        while any(r is not None for r in slot_req):
+        while any(r is not None for r in slot_req) or retry_queue:
+            if not any(r is not None for r in slot_req):
+                # an evacuation emptied the fleet with re-admissions
+                # pending: refill before dispatching
+                state = admission_tick(state)
+                continue
             # A dispatch may not run past the next admit tick while an
             # admission may be pending (free slot + a queue not yet known to
             # be exhausted) — the tick is a host decision the device cannot
@@ -462,20 +773,67 @@ class BatchScheduler:
             # exact pull timing; once the iterator is exhausted, full-length
             # dispatches resume for the drain phase.
             max_steps = cfg.sync_every
-            if not exhausted and any(r is None for r in slot_req):
+            if (not exhausted or retry_queue) and any(r is None for r in slot_req):
                 max_steps = min(max_steps, cfg.admit_every - it % cfg.admit_every)
             it0 = it
+
+            def attempt_dispatch():
+                # the injector hook fires first: an injected loss surfaces
+                # before the engine consumes (donates) the state buffers,
+                # so a retry or an evacuation reads intact state
+                if self.fault_injector is not None:
+                    self.fault_injector.pre_dispatch(it, tuple(self._current_devs))
+                new_state, ms, executed, moved = engine.run(state, max_steps, it)
+                ms, executed, moved = jax.device_get((ms, executed, moved))
+                return new_state, ms, executed, moved
+
             # the first-ever dispatch traces + compiles the fused step, so
             # its span is the trace's "compile" lane entry
+            evacuated = False
             with rec.span(
                 "service.dispatch" if self._warm else "service.compile",
                 it=it,
                 max_steps=max_steps,
             ) as sp:
-                state, ms, executed, moved = engine.run(state, max_steps, it)
-                ms, executed, moved = jax.device_get((ms, executed, moved))
-                k = int(np.sum(executed))
+                attempt = 0
+                while True:
+                    try:
+                        state, ms, executed, moved = _call_with_timeout(
+                            attempt_dispatch, self.dispatch_timeout_s
+                        )
+                        k = int(np.sum(executed))
+                        break
+                    except (DeviceLostError, DispatchTimeout) as err:
+                        dev = self._attribute_fault(err, it)
+                        rec.event(
+                            "service.dispatch_fault",
+                            it=it,
+                            device=dev,
+                            attempt=attempt,
+                            error=type(err).__name__,
+                        )
+                        if attempt < self.max_dispatch_retries:
+                            # transient until proven permanent: bounded
+                            # retries with exponential backoff
+                            attempt += 1
+                            bump("dispatch_retries")
+                            if self.retry_backoff_s > 0:
+                                time.sleep(
+                                    self.retry_backoff_s * 2 ** (attempt - 1)
+                                )
+                            continue
+                        if dev is None:
+                            raise  # unattributable: nothing to evacuate
+                        state = evacuate_and_shrink(state, dev)
+                        evacuated = True
+                        k = 0
+                        break
                 sp["executed"] = k
+            if evacuated:
+                # no iteration executed: loop back and dispatch the same
+                # ``it`` on the shrunken mesh (re-admissions wait for their
+                # admit tick, exactly like any other queued request)
+                continue
             self._warm = True
             assert k >= 1, "fused dispatch executed no iterations"
             bump("dispatches")
@@ -486,7 +844,7 @@ class BatchScheduler:
                 # metrics, after the dispatch returned: nothing here can
                 # perturb the device computation.
                 occ = np.asarray(ms["occupied"][:k]).reshape(
-                    k, engine.n_devices, per_dev
+                    k, engine.n_devices, engine.slots_per_device
                 )
                 n_live = occ.sum(axis=2)
                 for t in range(k):
@@ -535,7 +893,7 @@ class BatchScheduler:
                             bump("quarantines")
                         rec.event(
                             "service.collected",
-                            lane=slot // per_dev,
+                            lane=slot // engine.slots_per_device,
                             req_id=req_id,
                             slot=slot,
                             status=status,
@@ -552,6 +910,9 @@ class BatchScheduler:
                                 admitted_at=int(slot_admitted[slot]),
                                 finished_at=it,
                                 backend=engine.backend,
+                                attempts=1 + evac_attempts.pop(req_id, 0),
+                                retried_from=evac_from.pop(req_id, None),
+                                evacuated=evac_kind.pop(req_id, None),
                             )
                         )
             for res in collected:
@@ -586,7 +947,7 @@ class BatchScheduler:
                 bump("deadlines")
                 rec.event(
                     "service.deadline",
-                    lane=slot // per_dev,
+                    lane=slot // engine.slots_per_device,
                     req_id=req.req_id,
                     slot=slot,
                     it=it,
@@ -603,6 +964,9 @@ class BatchScheduler:
                     admitted_at=int(slot_admitted[slot]),
                     finished_at=it,
                     backend=engine.backend,
+                    attempts=1 + evac_attempts.pop(req.req_id, 0),
+                    retried_from=evac_from.pop(req.req_id, None),
+                    evacuated=evac_kind.pop(req.req_id, None),
                 )
                 state = engine.release(state, slot)
                 slot_req[slot] = None

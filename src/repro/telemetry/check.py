@@ -9,9 +9,10 @@ Usage (exit 0 iff every requested artifact is well-formed)::
 Checks the structural contracts the rest of the tooling relies on:
 Chrome traces must carry the required ``ph``/``ts``/``pid``/``tid`` keys,
 balanced ``B``/``E`` span stacks per lane, one named lane per device, and
-(optionally) at least one matched ``s``/``f`` flow pair — migrations or
-reroutes.  Metrics files must be one JSON object per line, each with the
-recorder's ``kind``/``name``/``ts``/``seq`` envelope.
+(optionally) at least one matched ``s``/``f`` flow pair — migrations,
+reroutes, or (with ``--expect-flow-name``) a specific flow such as a
+device-loss evacuation.  Metrics files must be one JSON object per line,
+each with the recorder's ``kind``/``name``/``ts``/``seq`` envelope.
 """
 
 from __future__ import annotations
@@ -35,7 +36,10 @@ EVENT_KINDS = {
 
 
 def check_trace(
-    path: str, n_devices: Optional[int] = None, expect_flow: bool = False
+    path: str,
+    n_devices: Optional[int] = None,
+    expect_flow: bool = False,
+    expect_flow_name: Optional[str] = None,
 ) -> List[str]:
     """Return a list of problems with the Chrome trace at ``path``."""
     problems: List[str] = []
@@ -101,6 +105,15 @@ def check_trace(
                 f"no matched s/f flow pair (starts={len(flow_starts)}, "
                 f"ends={len(flow_ends)})"
             )
+    if expect_flow_name is not None:
+        matched_names = {
+            flow_starts[i] for i in set(flow_starts) & set(flow_ends)
+        }
+        if expect_flow_name not in matched_names:
+            problems.append(
+                f"no matched flow named {expect_flow_name!r} "
+                f"(found: {sorted(matched_names)})"
+            )
     unmatched = set(flow_starts) ^ set(flow_ends)
     if unmatched:
         problems.append(f"unpaired flow ids: {sorted(unmatched)[:8]}")
@@ -152,13 +165,23 @@ def main(argv: Optional[List[str]] = None) -> int:
         action="store_true",
         help="require >=1 matched s/f flow pair (migration or reroute)",
     )
+    ap.add_argument(
+        "--expect-flow-name",
+        default=None,
+        metavar="NAME",
+        help="require >=1 matched flow pair with this exact name "
+        "(e.g. service.evacuate, service.migrate, service.reroute)",
+    )
     args = ap.parse_args(argv)
     if not args.trace and not args.metrics:
         ap.error("nothing to check: pass --trace and/or --metrics")
     problems: List[str] = []
     if args.trace:
         problems += check_trace(
-            args.trace, n_devices=args.devices, expect_flow=args.expect_flow
+            args.trace,
+            n_devices=args.devices,
+            expect_flow=args.expect_flow,
+            expect_flow_name=args.expect_flow_name,
         )
     if args.metrics:
         problems += check_metrics(args.metrics)

@@ -109,15 +109,18 @@ class Recorder:
         """
         total = self.counters.get(name, 0) + n
         self.counters[name] = total
+        # attrs first throughout: a caller attr must never overwrite the
+        # envelope ("kind", "ts", ...) — a collision would silently turn the
+        # event into an unknown type that every consumer drops
         self._emit(
             {
+                **attrs,
                 "kind": "counter",
                 "name": name,
                 "ts": self.clock(),
                 "lane": lane,
                 "n": n,
                 "total": total,
-                **attrs,
             }
         )
 
@@ -129,12 +132,12 @@ class Recorder:
         self.gauges[key] = value
         self._emit(
             {
+                **attrs,
                 "kind": "gauge",
                 "name": name,
                 "ts": self.clock(),
                 "lane": lane,
                 "value": value,
-                **attrs,
             }
         )
 
@@ -156,12 +159,12 @@ class Recorder:
         h["max"] = max(h["max"], value)
         self._emit(
             {
+                **attrs,
                 "kind": "hist",
                 "name": name,
                 "ts": self.clock(),
                 "lane": lane,
                 "value": value,
-                **attrs,
             }
         )
 
@@ -171,11 +174,11 @@ class Recorder:
         """Emit a point-in-time (instant) event."""
         self._emit(
             {
+                **attrs,
                 "kind": "instant",
                 "name": name,
                 "ts": self.clock(),
                 "lane": lane,
-                **attrs,
             }
         )
 
@@ -196,12 +199,12 @@ class Recorder:
         self._span_depth = depth + 1
         self._emit(
             {
+                **attrs,
                 "kind": "span_begin",
                 "name": name,
                 "ts": t0,
                 "lane": lane,
                 "depth": depth,
-                **attrs,
             }
         )
         merged: Dict[str, Any] = dict(attrs)
@@ -217,13 +220,13 @@ class Recorder:
             tot["total_s"] += t1 - t0
             self._emit(
                 {
+                    **merged,
                     "kind": "span_end",
                     "name": name,
                     "ts": t1,
                     "lane": lane,
                     "depth": depth,
                     "dur": t1 - t0,
-                    **merged,
                 }
             )
 
@@ -247,22 +250,22 @@ class Recorder:
         ts = self.clock()
         self._emit(
             {
+                **attrs,
                 "kind": "flow_begin",
                 "name": name,
                 "ts": ts,
                 "lane": src_lane,
                 "id": fid,
-                **attrs,
             }
         )
         self._emit(
             {
+                **attrs,
                 "kind": "flow_end",
                 "name": name,
                 "ts": ts,
                 "lane": dst_lane,
                 "id": fid,
-                **attrs,
             }
         )
         return fid

@@ -33,6 +33,10 @@ class ServiceStats:
     deadlines: int = 0  # slots evicted on an expired SLO
     checkpoints: int = 0  # service snapshots written
     reroutes: int = 0  # fallback re-admissions (graceful layer)
+    dispatch_retries: int = 0  # dispatches re-attempted after a transient fault
+    evacuations: int = 0  # slots recovered/re-admitted off a failed device
+    mesh_shrinks: int = 0  # engine rebuilds onto a smaller surviving sub-mesh
+    mesh_regrows: int = 0  # engine rebuilds back onto a restored device
 
     def add(self, name: str, n: int = 1) -> int:
         """Bump counter ``name`` by ``n``; unknown names raise AttributeError."""

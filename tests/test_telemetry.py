@@ -190,6 +190,43 @@ def test_chrome_trace_checker_flags_problems(tmp_path):
     assert any("flow" in p for p in problems)
 
 
+def test_checker_expect_flow_name(tmp_path):
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, _synthetic_run_events())
+    assert check_trace(path, expect_flow_name="service.migrate") == []
+    problems = check_trace(path, expect_flow_name="service.evacuate")
+    assert any("service.evacuate" in p for p in problems), problems
+
+
+def test_attrs_cannot_clobber_event_envelope():
+    """Regression: rec.flow(..., kind="readmit") once overwrote the event's
+    own "kind" field, silently turning both flow halves into unknown-typed
+    events every consumer dropped.  The envelope must win for all emitters."""
+    sink = MemorySink()
+    rec = Recorder(sinks=(sink,), clock=FakeClock())
+    rec.count("c", kind="evil", ts=99)
+    rec.gauge("g", 1.0, kind="evil")
+    rec.observe("h", 1.0, kind="evil")
+    rec.event("i", kind="evil")
+    with rec.span("s", kind="evil") as sp:
+        sp["kind"] = "evil"  # body attrs ride span_end, envelope still wins
+    rec.flow("f", 0, 1, kind="evil", id=-1)
+    kinds = [e["kind"] for e in sink.events]
+    assert kinds == [
+        "counter",
+        "gauge",
+        "hist",
+        "instant",
+        "span_begin",
+        "span_end",
+        "flow_begin",
+        "flow_end",
+    ]
+    assert [e["name"] for e in sink.events][:1] == ["c"]
+    assert sink.events[0]["ts"] == 0.0
+    assert sink.events[-1]["id"] == sink.events[-2]["id"] == 1
+
+
 # --- load views --------------------------------------------------------------
 
 
@@ -249,6 +286,33 @@ def test_service_stats_drift_guard():
         ServiceStats.from_dict({"frobnications": 1})
     with pytest.raises(AttributeError):
         ServiceStats().add("frobnications")
+
+
+def test_service_stats_elastic_counters_in_schema():
+    """The device-loss counters are first-class schema fields: they round-trip
+    through from_dict (so GracefulScheduler's field-wise merge aggregates
+    them) and appear in every pool's stats dict."""
+    s = ServiceStats.from_dict(
+        {
+            "dispatch_retries": 2,
+            "evacuations": 4,
+            "mesh_shrinks": 1,
+            "mesh_regrows": 1,
+        }
+    )
+    assert (s.dispatch_retries, s.evacuations, s.mesh_shrinks, s.mesh_regrows) == (
+        2,
+        4,
+        1,
+        1,
+    )
+    merged = ServiceStats()
+    merged.merge(s)
+    merged.merge(s)
+    assert merged.evacuations == 8 and merged.mesh_shrinks == 2
+    assert {"dispatch_retries", "evacuations", "mesh_shrinks", "mesh_regrows"} <= set(
+        s.as_dict()
+    )
 
 
 # --- bit-parity: recorder on vs off ------------------------------------------
