@@ -87,3 +87,24 @@ def save_results(name: str, records, meta: dict | None = None) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path
+
+
+def save_bench_summary(metrics: dict, meta: dict | None = None) -> str:
+    """Write the normalized cross-module summary the regression gate consumes.
+
+    ``metrics`` maps a stable row name (the CSV ``name`` column) to its
+    wall time in us/call.  The file lands at
+    ``results/benchmarks/BENCH_summary.json`` with the same provenance
+    header as :func:`save_results`; ``python -m repro.perf.regress``
+    compares two of these and fails CI on > 1.3x slowdowns.
+    """
+    out_dir = os.path.join(_REPO, "results", "benchmarks")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_summary.json")
+    payload = {
+        "meta": {**collect_meta(), **(meta or {})},
+        "metrics": {k: float(v) for k, v in sorted(metrics.items())},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

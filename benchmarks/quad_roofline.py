@@ -1,0 +1,48 @@
+"""Quadrature roofline benchmark: measured machine + kernel cost catalog.
+
+The harness adapter for :mod:`repro.perf` — profiles this device
+(``repro.perf.machine``), lowers and times the real compiled quadrature
+programs (``repro.perf.catalog``: GM eval rungs, windowed advance, VEGAS
+iterate, fused service dispatch), and reports each kernel's wall time with
+its predicted-vs-measured roofline fraction as the ``derived`` column.
+
+Side effects: refreshes ``results/perf/machine.json`` and
+``results/perf/kernel_catalog.json`` (the report's inputs) and saves a
+provenance-headed ``results/benchmarks/quad_roofline.json``.
+
+Unlike the retired LM sweep in :mod:`benchmarks.roofline` this costs the
+programs this repo actually runs, on terms measured on this machine —
+``python -m benchmarks.run --roofline`` routes here.
+"""
+
+from __future__ import annotations
+
+from benchmarks._common import save_results
+from repro.perf import catalog as catalog_lib
+from repro.perf import machine as machine_lib
+
+
+def run(fast: bool = True) -> list[dict]:
+    machine = machine_lib.profile_machine(fast=fast)
+    machine_lib.save_machine(machine, machine_lib.DEFAULT_PATH)
+    catalog = catalog_lib.build_catalog(machine, fast=fast)
+    catalog_lib.save_catalog(catalog, catalog_lib.DEFAULT_PATH)
+    entries = catalog["entries"]
+    save_results(
+        "quad_roofline",
+        entries,
+        meta={"machine": machine["name"], "fast": fast},
+    )
+    return entries
+
+
+def rows(recs: list[dict]):
+    for e in recs:
+        rung = e.get("rung")
+        name = f"roofline_{e['kernel']}" + (f"_n{rung}" if rung else "")
+        yield (name, f"{e['measured_s'] * 1e6:.1f}", f"{e['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    for row in rows(run(fast=True)):
+        print(",".join(str(x) for x in row))

@@ -1,11 +1,15 @@
 """Roofline analysis per (arch x shape) on the single-pod production mesh.
 
-Three terms (seconds, PER DEVICE — the partitioned HLO is the per-device
-program):
+Retained LM-era sweep; the quadrature kernels this repo actually runs are
+costed by :mod:`repro.perf.catalog` (``python -m benchmarks.run
+--roofline``).  Three terms (seconds, PER DEVICE — the partitioned HLO is
+the per-device program), sourced from a measured machine file when one
+exists (:func:`resolve_terms`) and from the documented v5e preset below
+otherwise:
 
-    compute    = HLO_FLOPs / 197e12          (v5e bf16 peak per chip)
-    memory     = HLO_bytes_accessed / 819e9  (HBM bandwidth)
-    collective = per-device collective payload bytes / 50e9 (ICI per link)
+    compute    = HLO_FLOPs / peak_flops       (preset: 197e12, v5e bf16)
+    memory     = HLO_bytes_accessed / mem_bw  (preset: 819e9, HBM)
+    collective = per-device collective payload bytes / ici_bw (preset: 50e9)
 
 XLA's HloCostAnalysis counts a while/scan body ONCE regardless of trip
 count, so costing the scanned-layers module directly undercounts by the
@@ -33,12 +37,38 @@ import dataclasses
 import json
 import os
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# Documented v5e fallback preset — vendor-sheet numbers for the 256-chip
+# production mesh this sweep was originally written against.  These are
+# NOT this container's numbers: prefer a measured machine file
+# (``python -m repro.perf.machine``), resolved via :func:`resolve_terms`
+# below / the ``--machine`` flag.  The values are pinned to
+# ``repro.perf.machine.PRESETS["v5e"]`` by a drift test in
+# ``tests/test_perf.py``.
+PEAK_FLOPS = 197e12  # v5e bf16 peak per chip, FLOP/s
+HBM_BW = 819e9  # v5e HBM bandwidth per chip, B/s
+ICI_BW = 50e9  # v5e ICI per link, B/s
 CHIPS = 256
 
 _HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def resolve_terms(machine_path: str | None = None) -> tuple[float, float, float]:
+    """(peak_flops, mem_bw, ici_bw) from a machine file, else the v5e preset.
+
+    Resolution order matches ``repro.perf.machine.resolve_machine``: an
+    explicit path, then the committed ``results/perf/machine.json``, then
+    the v5e preset above.  A measured file with no inter-device probe
+    (single device) keeps the preset ICI term so the collective column
+    stays defined.
+    """
+    from repro.perf.machine import resolve_machine
+
+    m = resolve_machine(machine_path, preset="v5e")
+    return (
+        float(m["peak_flops"]),
+        float(m["mem_bw"]),
+        float(m["ici_bw"]) if m.get("ici_bw") else ICI_BW,
+    )
 
 
 def _cost_of(cfg, shape_name, mesh, microbatches, remat, rules=None):
@@ -141,6 +171,7 @@ def analyse_cell(
     remat: str = "full",
     dryrun_dir: str = "results/dryrun",
     rules=None,
+    terms: tuple[float, float, float] | None = None,
 ):
     """Returns the roofline record for one cell on the (16,16) mesh."""
     from repro.configs import get_config
@@ -189,9 +220,14 @@ def analyse_cell(
         total["bytes"] = active_bytes + cache_bytes
         total["flops"] = model_flops(cfg, shape) / CHIPS
 
-    compute_t = total["flops"] / PEAK_FLOPS
-    memory_t = total["bytes"] / HBM_BW
-    coll_t = total["coll"] / ICI_BW
+    peak_flops, hbm_bw, ici_bw = terms if terms is not None else (
+        PEAK_FLOPS,
+        HBM_BW,
+        ICI_BW,
+    )
+    compute_t = total["flops"] / peak_flops
+    memory_t = total["bytes"] / hbm_bw
+    coll_t = total["coll"] / ici_bw
     bound = max(compute_t, memory_t, coll_t)
     dominant = (
         "compute"
@@ -265,7 +301,14 @@ def main() -> None:
     ap.add_argument("--out", default="results/roofline")
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--remat", default="full")
+    ap.add_argument(
+        "--machine",
+        default=None,
+        help="measured machine file for the roofline terms "
+        "(default: results/perf/machine.json if present, else v5e preset)",
+    )
     args = ap.parse_args()
+    terms = resolve_terms(args.machine)
 
     archs = ARCH_IDS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
@@ -286,6 +329,7 @@ def main() -> None:
                     shape,
                     microbatches=args.microbatches,
                     remat=args.remat,
+                    terms=terms,
                 )
             except Exception as e:  # noqa: BLE001
                 rec = {

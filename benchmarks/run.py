@@ -1,8 +1,12 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Default mode runs reduced
+Prints ``name,us_per_call,derived`` CSV rows and writes the normalized
+``results/benchmarks/BENCH_summary.json`` the perf regression gate
+(``python -m repro.perf.regress``) consumes.  Default mode runs reduced
 grids sized for this CPU container; pass ``--full`` for the figure-scale
-grids and ``--roofline`` to include the (slow) LM roofline sweep.
+grids and ``--roofline`` to include the quadrature roofline sweep
+(:mod:`benchmarks.quad_roofline`: measured machine terms + per-kernel
+cost catalog — not the retired LM sweep in :mod:`benchmarks.roofline`).
 """
 
 from __future__ import annotations
@@ -17,6 +21,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated module names")
+    ap.add_argument(
+        "--roofline",
+        action="store_true",
+        help="include the quad_roofline sweep (machine probes + kernel "
+        "cost catalog; refreshes results/perf/)",
+    )
     args = ap.parse_args()
 
     # the runner owns the sweep timestamp: every module saved below carries
@@ -54,21 +64,40 @@ def main() -> None:
         "batch_throughput": batch_throughput,
         "sharded_service": sharded_service,
     }
+    if args.roofline:
+        from benchmarks import quad_roofline
+
+        modules["quad_roofline"] = quad_roofline
     if args.only:
         keep = set(args.only.split(","))
+        # --only quad_roofline works without also passing --roofline
+        if "quad_roofline" in keep and "quad_roofline" not in modules:
+            from benchmarks import quad_roofline
+
+            modules["quad_roofline"] = quad_roofline
         modules = {k: v for k, v in modules.items() if k in keep}
 
     print("name,us_per_call,derived")
     failures = 0
+    summary: dict[str, float] = {}
     for name, mod in modules.items():
         try:
             recs = mod.run(fast=not args.full)
             for row in mod.rows(recs):
                 print(",".join(str(x) for x in row), flush=True)
+                try:
+                    summary[str(row[0])] = float(row[1])
+                except (TypeError, ValueError, IndexError):
+                    pass  # non-numeric wall column: skip from the gate
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},0,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if summary:
+        path = _common.save_bench_summary(
+            summary, meta={"modules": sorted(modules), "full": args.full}
+        )
+        print(f"# BENCH_summary: {path}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,39 @@
+"""Performance observatory: measured rooflines, kernel cost capture,
+regression-gated benchmark tracking (DESIGN.md §9).
+
+The subsystem has four layers, each usable standalone:
+
+- :mod:`~repro.perf.machine` — micro-benchmark the *current* device into a
+  machine file (peak FLOP/s via a timed matmul, memory bandwidth via timed
+  saxpy/reduction probes) plus documented hardware presets (the old
+  ``benchmarks/roofline.py`` v5e constants live on as the ``"v5e"`` preset);
+- :mod:`~repro.perf.catalog` — lower the *real* compiled programs (GM rule
+  eval at each window rung, the windowed advance, the VEGAS iterate, the
+  fused sharded-service dispatch), record XLA ``cost_analysis()`` FLOPs and
+  bytes alongside measured wall time, and derive predicted-vs-measured
+  roofline fractions per (kernel, rung, d);
+- :mod:`~repro.perf.regress` — compare two normalized ``BENCH_summary.json``
+  files with noise-tolerant thresholds (CI perf gate);
+- :mod:`~repro.perf.report` — render machine file + catalog + bench history
+  + telemetry latency/idle views into one markdown/HTML report under
+  ``results/perf/``.
+
+Everything here is measurement-side only: nothing in this package is on any
+serving or integration hot path, and nothing records inside traced code.
+"""
+
+from repro.perf.machine import (
+    PRESETS,
+    load_machine,
+    profile_machine,
+    resolve_machine,
+    save_machine,
+)
+
+__all__ = [
+    "PRESETS",
+    "load_machine",
+    "profile_machine",
+    "resolve_machine",
+    "save_machine",
+]

@@ -755,6 +755,12 @@ class BatchScheduler:
             )
             return state
 
+        # Dispatch-latency views (DESIGN.md §9): per-dispatch wall time and
+        # the host-side queue wait between dispatches (admission, collection,
+        # checkpointing, result consumption — everything the devices idle
+        # through).  Recorded strictly at dispatch boundaries on the
+        # recorder's clock, so recorder-off runs are bit-identical.
+        last_dispatch_end: Optional[float] = None
         if not resume:
             # on resume the snapshot was taken at a tick boundary, right
             # after its admissions: the next host decision is the dispatch
@@ -790,6 +796,14 @@ class BatchScheduler:
             # the first-ever dispatch traces + compiles the fused step, so
             # its span is the trace's "compile" lane entry
             evacuated = False
+            if rec.enabled:
+                t_dispatch0 = rec.clock()
+                if last_dispatch_end is not None:
+                    rec.observe(
+                        "service.queue_wait_s",
+                        t_dispatch0 - last_dispatch_end,
+                        it=it,
+                    )
             with rec.span(
                 "service.dispatch" if self._warm else "service.compile",
                 it=it,
@@ -832,8 +846,18 @@ class BatchScheduler:
             if evacuated:
                 # no iteration executed: loop back and dispatch the same
                 # ``it`` on the shrunken mesh (re-admissions wait for their
-                # admit tick, exactly like any other queued request)
+                # admit tick, exactly like any other queued request).  No
+                # wall-time sample either — the next successful dispatch's
+                # queue wait absorbs the whole recovery gap, which is the
+                # honest account of where the time went.
                 continue
+            if rec.enabled:
+                last_dispatch_end = rec.clock()
+                rec.observe(
+                    "service.dispatch_wall_s",
+                    last_dispatch_end - t_dispatch0,
+                    it=it0,
+                )
             self._warm = True
             assert k >= 1, "fused dispatch executed no iterations"
             bump("dispatches")

@@ -16,7 +16,7 @@ on/off cannot perturb any compiled computation (bit-parity is asserted in
 - :mod:`~repro.telemetry.logutil` — shared CLI logging setup.
 """
 
-from repro.telemetry.core import NULL, NullRecorder, Recorder
+from repro.telemetry.core import NULL, NullRecorder, Recorder, quantile
 from repro.telemetry.sinks import JsonlSink, MemorySink, read_jsonl, summary_table
 from repro.telemetry.stats import ServiceStats
 from repro.telemetry.trace import to_chrome, write_chrome_trace
@@ -25,6 +25,7 @@ __all__ = [
     "NULL",
     "NullRecorder",
     "Recorder",
+    "quantile",
     "JsonlSink",
     "MemorySink",
     "read_jsonl",

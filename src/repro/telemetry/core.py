@@ -42,6 +42,35 @@ from contextlib import contextmanager
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 
+#: Per-histogram raw-sample retention cap.  ``observe`` keeps the first N
+#: values so :meth:`Recorder.quantile` can answer p50/p99 exactly for runs
+#: of realistic length (a dispatch-boundary histogram collects one value
+#: per dispatch — tens of thousands at most); past the cap new values still
+#: update count/sum/min/max but no longer enter the quantile sample.  The
+#: first-N policy is deterministic, which the bit-parity and fake-clock
+#: tests rely on.
+HIST_SAMPLE_CAP = 16384
+
+
+def quantile(values: List[float], q: float) -> float:
+    """Linear-interpolation quantile of ``values`` (q in [0, 1]).
+
+    Plain Python (no numpy) so offline consumers — the perf report reading
+    a metrics JSONL long after the run — share the exact computation the
+    live recorder uses.
+    """
+    if not values:
+        return 0.0
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q must be in [0, 1], got {q}")
+    s = sorted(values)
+    pos = q * (len(s) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    frac = pos - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
 class Recorder:
     """Collects structured telemetry events and aggregates.
 
@@ -72,6 +101,7 @@ class Recorder:
         self.counters: Dict[str, float] = {}
         self.gauges: Dict[str, float] = {}
         self.hists: Dict[str, Dict[str, float]] = {}
+        self.hist_samples: Dict[str, List[float]] = {}
         self.span_totals: Dict[str, Dict[str, float]] = {}
 
     # -- plumbing ---------------------------------------------------------
@@ -157,6 +187,9 @@ class Recorder:
         h["sum"] += value
         h["min"] = min(h["min"], value)
         h["max"] = max(h["max"], value)
+        samples = self.hist_samples.setdefault(name, [])
+        if len(samples) < HIST_SAMPLE_CAP:
+            samples.append(value)
         self._emit(
             {
                 **attrs,
@@ -167,6 +200,21 @@ class Recorder:
                 "value": value,
             }
         )
+
+    def quantile(self, name: str, q: float) -> float:
+        """Quantile of histogram ``name``'s retained samples (0 if empty).
+
+        Exact (linear interpolation over every observed value) until the
+        histogram passes :data:`HIST_SAMPLE_CAP` observations, after which
+        it is the quantile of the first cap-many values.
+        """
+        return quantile(self.hist_samples.get(name, []), q)
+
+    def hist_quantiles(
+        self, name: str, qs: Tuple[float, ...] = (0.5, 0.99)
+    ) -> Dict[float, float]:
+        """Several quantiles of histogram ``name`` at once (p50/p99 default)."""
+        return {q: self.quantile(name, q) for q in qs}
 
     def event(
         self, name: str, lane: Optional[int] = None, **attrs: Any
@@ -303,6 +351,7 @@ class NullRecorder:
     counters: Dict[str, float] = {}
     gauges: Dict[str, float] = {}
     hists: Dict[str, Dict[str, float]] = {}
+    hist_samples: Dict[str, List[float]] = {}
     span_totals: Dict[str, Dict[str, float]] = {}
 
     def add_sink(self, sink: Any) -> None:  # pragma: no cover - misuse guard
@@ -318,6 +367,14 @@ class NullRecorder:
 
     def observe(self, name: str, value: float, lane: Optional[int] = None, **attrs: Any) -> None:
         return None
+
+    def quantile(self, name: str, q: float) -> float:
+        return 0.0
+
+    def hist_quantiles(
+        self, name: str, qs: Tuple[float, ...] = (0.5, 0.99)
+    ) -> Dict[float, float]:
+        return {q: 0.0 for q in qs}
 
     def event(self, name: str, lane: Optional[int] = None, **attrs: Any) -> None:
         return None

@@ -115,6 +115,24 @@ def mean_imbalance(timeline: Timeline) -> float:
     return sum(series) / len(series)
 
 
+def hist_values_from_events(
+    events: Iterable[Dict[str, Any]], name: str
+) -> List[float]:
+    """All values of histogram ``name`` recorded in an event stream.
+
+    The offline (metrics-JSONL) half of the latency views: feed the result
+    to :func:`repro.telemetry.core.quantile` for the same p50/p99 the live
+    recorder's ``quantile`` reports — e.g. the ``service.dispatch_wall_s``
+    / ``service.queue_wait_s`` histograms the scheduler records at dispatch
+    boundaries, which the perf report renders.
+    """
+    return [
+        float(e["value"])
+        for e in events
+        if e.get("kind") == "hist" and e.get("name") == name
+    ]
+
+
 def mean_work_imbalance_from_events(
     events: Iterable[Dict[str, Any]], name: str = WORK_IMB
 ) -> float:

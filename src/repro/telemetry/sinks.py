@@ -109,11 +109,13 @@ def summary_table(recorder: Any) -> str:
                 f"{int(h['count'])}",
                 f"{h['sum'] / max(h['count'], 1):.4g}",
                 f"{h['min']:.4g}",
+                f"{recorder.quantile(k, 0.5):.4g}",
+                f"{recorder.quantile(k, 0.99):.4g}",
                 f"{h['max']:.4g}",
             ]
             for k, h in sorted(recorder.hists.items())
         ],
-        ["name", "count", "mean", "min", "max"],
+        ["name", "count", "mean", "min", "p50", "p99", "max"],
     )
     section(
         "spans",

@@ -23,6 +23,10 @@ ALLOWED_FILES = {
     "launch/serve.py",
     "launch/train.py",
     "telemetry/check.py",
+    "perf/machine.py",
+    "perf/catalog.py",
+    "perf/regress.py",
+    "perf/report.py",
 }
 
 _PRINT = re.compile(r"^\s*print\(")

@@ -434,3 +434,69 @@ def test_distributed_imbalance_telemetry_matches_offline():
     # np.mean (pairwise) vs pure-python mean (sequential): identical values,
     # summation order may differ in the last ulp
     assert out["telemetry"] == pytest.approx(out["offline"], rel=1e-12, abs=1e-15)
+
+
+# --- histogram quantiles + scheduler dispatch-latency histograms -------------
+
+
+def test_quantile_function():
+    from repro.telemetry import quantile
+
+    assert quantile([], 0.5) == 0.0
+    assert quantile([3.0], 0.0) == quantile([3.0], 1.0) == 3.0
+    vals = [4.0, 1.0, 3.0, 2.0]
+    assert quantile(vals, 0.5) == 2.5  # linear interpolation, order-free
+    assert quantile(vals, 0.0) == 1.0 and quantile(vals, 1.0) == 4.0
+    assert quantile(vals, 0.25) == 1.75
+    with pytest.raises(ValueError):
+        quantile(vals, 1.5)
+
+
+def test_recorder_hist_quantiles_and_summary_columns():
+    rec = Recorder(sinks=(MemorySink(),), clock=FakeClock())
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0):
+        rec.observe("lat_s", v)
+    assert rec.quantile("lat_s", 0.5) == 3.0
+    assert rec.quantile("missing", 0.5) == 0.0
+    qs = rec.hist_quantiles("lat_s")
+    assert set(qs) == {0.5, 0.99} and qs[0.99] > qs[0.5]
+    table = summary_table(rec)
+    assert "p50" in table and "p99" in table
+    # NullRecorder mirrors the API inertly
+    assert NULL.quantile("lat_s", 0.5) == 0.0
+    assert NULL.hist_quantiles("lat_s") == {0.5: 0.0, 0.99: 0.0}
+
+
+def test_hist_sample_cap_keeps_aggregates_exact():
+    from repro.telemetry.core import HIST_SAMPLE_CAP
+
+    rec = Recorder(sinks=(), clock=FakeClock())
+    n = HIST_SAMPLE_CAP + 100
+    for i in range(n):
+        rec.observe("x", float(i))
+    # aggregates see every value; the quantile sample is the first N
+    assert rec.hists["x"]["count"] == n
+    assert rec.hists["x"]["max"] == float(n - 1)
+    assert len(rec.hist_samples["x"]) == HIST_SAMPLE_CAP
+    assert rec.quantile("x", 1.0) == float(HIST_SAMPLE_CAP - 1)
+
+
+def test_scheduler_records_dispatch_latency_histograms():
+    sink = MemorySink()
+    rec = Recorder(sinks=(sink,))
+    list(BatchScheduler(_cfg(), FAMILY, recorder=rec).serve(_requests(6)))
+    # one wall-time sample per executed dispatch, recorded host-side at the
+    # dispatch boundary (DESIGN.md §9); queue-wait has one fewer sample
+    # (it measures the gap since the *previous* dispatch)
+    wall = loadview.hist_values_from_events(sink.events, "service.dispatch_wall_s")
+    wait = loadview.hist_values_from_events(sink.events, "service.queue_wait_s")
+    n_dispatch = rec.counters["service.dispatches"]
+    assert len(wall) == n_dispatch > 0
+    assert len(wait) == n_dispatch - 1
+    assert all(v > 0 for v in wall)
+    assert all(v >= 0 for v in wait)
+    # live aggregates match the event stream (same samples, same math)
+    from repro.telemetry import quantile
+
+    assert rec.quantile("service.dispatch_wall_s", 0.5) == quantile(wall, 0.5)
+    assert rec.hists["service.dispatch_wall_s"]["count"] == len(wall)
